@@ -1,0 +1,66 @@
+"""Pallas kernel sanity bench: interpret-mode kernel vs jnp oracle
+(correctness + relative CPU cost; TPU timing is out of scope here) and
+survivor-packing traffic accounting (the paper's 32-bit compaction)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CODE_K7_CCSDS
+from repro.core.trellis import build_acs_tables
+from repro.core.viterbi import AcsPrecision, blocks_from_llrs, init_metric
+from repro.kernels.ops import viterbi_forward
+from repro.kernels.ref import acs_forward_ref
+
+
+def bench(n_frames: int = 512, n_stages: int = 64, iters: int = 3):
+    spec = CODE_K7_CCSDS
+    tables = build_acs_tables(spec, 2)
+    key = jax.random.PRNGKey(0)
+    llrs = jax.random.normal(key, (n_frames, n_stages, spec.beta))
+    blocks = blocks_from_llrs(llrs, 2)
+    lam0 = init_metric(n_frames, spec.n_states, None)
+    w = jnp.asarray(tables.fused_w)
+
+    lam_r, phi_r = acs_forward_ref(blocks, lam0, w, n_states=64, n_slots=4)
+    lam_k, phi_k = viterbi_forward(blocks, lam0, tables)
+    ok = bool(
+        np.allclose(lam_r, lam_k, atol=1e-5)
+        and (np.asarray(phi_r) == np.asarray(phi_k)).all()
+    )
+
+    rows = [("kernel/allclose-vs-ref", 0.0, f"ok={ok}")]
+    T = n_stages // 2
+    unpacked = T * n_frames * 64  # int8 bytes
+    packed = T * n_frames * 4 * 4  # 4 int32 words
+    rows.append(
+        ("kernel/survivor-packing", 0.0,
+         f"bytes {unpacked}->{packed} ({unpacked/packed:.1f}x)")
+    )
+
+    def time_fn(fn):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    t_ref = time_fn(
+        lambda: acs_forward_ref(
+            blocks, lam0, w, n_states=64, n_slots=4
+        )[0].block_until_ready()
+    )
+    rows.append(("kernel/jnp-oracle", t_ref, "cpu"))
+    t_int = time_fn(
+        lambda: viterbi_forward(blocks, lam0, tables)[0].block_until_ready()
+    )
+    rows.append(("kernel/pallas-interpret", t_int, "cpu-interpret(no-perf)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,67 @@
+"""§V / §VIII-C analog: radix-2 vs radix-4 cost.
+
+The paper counts Q = tensor ops per trellis stage on 16x16 fragments:
+radix-2 Q=2 (k=7), radix-4 packed Q=0.5.  On the TPU formulation the
+analogue is (matmul FLOPs per stage, sequential steps per stage): radix-4
+halves the sequential scan length (the latency-critical dimension) at
+equal useful work.  Measured: wall-time of the fused forward at rho=1 vs
+rho=2 on equal workloads.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CODE_K7_CCSDS
+from repro.core.trellis import build_acs_tables
+from repro.core.viterbi import (
+    AcsPrecision,
+    blocks_from_llrs,
+    forward_fused,
+    init_metric,
+)
+
+
+def bench(n_frames: int = 1024, n_stages: int = 256, iters: int = 5):
+    spec = CODE_K7_CCSDS
+    key = jax.random.PRNGKey(0)
+    llrs = jax.random.normal(key, (n_frames, n_stages, spec.beta))
+    rows = []
+    # paper's Q counts (16x16 fragments)
+    rows.append(("radix/Q-radix2-16x16", 0.0, f"Q={2**(spec.k-6)}"))
+    rows.append(("radix/Q-radix4-packed-16x16", 0.0, "Q=0.5"))
+    for rho in (1, 2, 3):
+        tables = build_acs_tables(spec, rho)
+        pad = (-n_stages) % rho
+        llrs_p = (
+            jnp.pad(llrs, ((0, 0), (0, pad), (0, 0))) if pad else llrs
+        )
+        blocks = blocks_from_llrs(llrs_p, rho)
+        lam0 = init_metric(n_frames, spec.n_states, None)
+
+        def run():
+            lam, _ = forward_fused(blocks, lam0, tables, AcsPrecision())
+            return lam.block_until_ready()
+
+        run()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run()
+        dt = (time.perf_counter() - t0) / iters
+        # fused matmul dims per sequential step
+        w = tables.fused_w
+        rows.append(
+            (
+                f"radix/rho={rho}",
+                dt * 1e6,
+                f"steps={n_stages//rho};matmul={n_frames}x{w.shape[0]}x{w.shape[1]}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

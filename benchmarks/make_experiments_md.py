@@ -1,0 +1,166 @@
+"""Regenerate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
+experiments/dryrun/*.json.  §Perf (the hillclimb log) is kept verbatim
+between the PERF-BEGIN/PERF-END markers.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+MD = ROOT / "EXPERIMENTS.md"
+
+HW_NOTE = (
+    "Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, "
+    "~50 GB/s/link ICI.  flops/bytes come from the loop-aware HLO walker "
+    "(src/repro/hlocount.py; XLA cost_analysis counts while bodies once), "
+    "wire bytes from ring-model collective accounting over the "
+    "post-optimization SPMD HLO.  Caveat: fusion boundaries are the CPU "
+    "backend's; TPU fusion (and the Pallas ACS/attention kernels) would "
+    "lower the memory term further, so t_memory is an upper bound."
+)
+
+
+def load(mesh):
+    d = DRYRUN / mesh
+    out = []
+    if d.exists():
+        for f in sorted(d.glob("*.json")):
+            out.append(json.loads(f.read_text()))
+    return out
+
+
+def fmt_bytes(b):
+    if b > 2**40:
+        return f"{b/2**40:.2f}TiB"
+    if b > 2**30:
+        return f"{b/2**30:.2f}GiB"
+    return f"{b/2**20:.1f}MiB"
+
+
+def dryrun_section():
+    lines = ["## §Dry-run", "",
+             "`python -m repro.launch.dryrun --all --mesh both` — every "
+             "(arch × shape) lowered + compiled on the production meshes "
+             "(512 host devices).  Per-device memory from "
+             "`compiled.memory_analysis()`; per-device flops / HBM bytes / "
+             "collective wire bytes from the loop-aware HLO walk.", ""]
+    for mesh in ("1pod-16x16", "2pod-2x16x16"):
+        recs = load(mesh)
+        if not recs:
+            continue
+        n_ok = sum(r["status"] == "ok" for r in recs)
+        n_skip = sum(r["status"] == "skipped" for r in recs)
+        n_fail = len(recs) - n_ok - n_skip
+        lines += [f"### mesh {mesh}  ({n_ok} ok / {n_skip} skipped / "
+                  f"{n_fail} failed)", "",
+                  "| arch | cell | status | args/dev | temp/dev | "
+                  "flops/dev | HBM bytes/dev | wire bytes/dev | "
+                  "collectives (AG/AR/RS/A2A/CP) |",
+                  "|---|---|---|---|---|---|---|---|---|"]
+        for r in recs:
+            if r["status"] != "ok":
+                reason = r.get("reason", r.get("error", ""))[:60]
+                lines.append(
+                    f"| {r['arch']} | {r['cell']} | {r['status']} "
+                    f"| - | - | - | - | - | {reason} |")
+                continue
+            ms = r.get("memory_stats") or {}
+            cc = r.get("collective_counts") or {}
+            coll = "/".join(
+                str(int(cc.get(k, 0)))
+                for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute"))
+            lines.append(
+                "| {a} | {c} | ok | {arg} | {tmp} | {fl:.2e} | {hb:.2e} | "
+                "{wb:.2e} | {coll} |".format(
+                    a=r["arch"], c=r["cell"],
+                    arg=fmt_bytes(ms.get("argument_bytes", 0)),
+                    tmp=fmt_bytes(ms.get("temp_bytes", 0)),
+                    fl=r["flops_per_device"],
+                    hb=r["hbm_bytes_per_device"],
+                    wb=r["wire_bytes_per_device"], coll=coll))
+        lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section():
+    lines = ["## §Roofline", "", HW_NOTE, "",
+             "Terms per step (seconds): compute = flops/dev ÷ peak; "
+             "memory = HBM bytes/dev ÷ bw; collective = wire bytes/dev ÷ "
+             "ICI bw.  MODEL/HLO = MODEL_FLOPS ÷ (flops/dev × chips) — "
+             "<1 measures remat/masking/dispatch overcompute.  MFU-bound "
+             "= MODEL_FLOPS ÷ (max-term × chips × peak): the utilization "
+             "IF the dominant term were perfectly overlapped — the "
+             "roofline fraction this report scores.", ""]
+    recs = load("1pod-16x16")
+    lines += ["| arch | cell | t_comp(s) | t_mem(s) | t_coll(s) | "
+              "bottleneck | MODEL/HLO | MFU-bound | one-line fix |",
+              "|---|---|---|---|---|---|---|---|---|"]
+    fixes = {
+        "compute": "raise arithmetic intensity (larger per-step tiles, "
+                   "drop masked-pair waste)",
+        "memory": "cut HBM round-trips: fuse/VMEM-resident blocks "
+                  "(Pallas), int8 KV, fewer f32 temps",
+        "collective": "reduce resharding: head-divisible TP layout, "
+                      "batch FSDP all-gathers, overlap with compute",
+    }
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['cell']} | - | - | - | "
+                         f"{r['status']} | - | - | - |")
+            continue
+        lines.append(
+            "| {a} | {c} | {tc:.3f} | {tm:.3f} | {tx:.3f} | {bn} | "
+            "{ra:.3f} | {mfu:.4f} | {fix} |".format(
+                a=r["arch"], c=r["cell"], tc=r["t_compute"],
+                tm=r["t_memory"], tx=r["t_collective"], bn=r["bottleneck"],
+                ra=r["useful_flops_ratio"], mfu=r["mfu_bound"],
+                fix=fixes[r["bottleneck"]]))
+    lines.append("")
+    # multi-pod delta summary
+    multi = {(
+        r["arch"], r["cell"]): r for r in load("2pod-2x16x16")}
+    if multi:
+        lines += ["### 2-pod (2×16×16) deltas", "",
+                  "The multi-pod pass proves the `pod` axis shards; "
+                  "per-device terms vs single-pod:", "",
+                  "| arch | cell | t_coll 1pod→2pod | t_mem 1pod→2pod |",
+                  "|---|---|---|---|"]
+        for r in recs:
+            m = multi.get((r["arch"], r["cell"]))
+            if not m or r["status"] != "ok" or m["status"] != "ok":
+                continue
+            lines.append(
+                "| {a} | {c} | {x1:.3f}→{x2:.3f} | {m1:.3f}→{m2:.3f} |"
+                .format(a=r["arch"], c=r["cell"], x1=r["t_collective"],
+                        x2=m["t_collective"], m1=r["t_memory"],
+                        m2=m["t_memory"]))
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    perf = ""
+    if MD.exists():
+        text = MD.read_text()
+        if "<!--PERF-BEGIN-->" in text:
+            perf = text.split("<!--PERF-BEGIN-->")[1].split(
+                "<!--PERF-END-->")[0]
+    out = [
+        "# EXPERIMENTS", "",
+        "Generated by `python -m benchmarks.make_experiments_md` from "
+        "`experiments/dryrun/*.json`; §Perf is maintained by hand "
+        "(hillclimb log).", "",
+        dryrun_section(), roofline_section(),
+        "## §Perf", "<!--PERF-BEGIN-->" + (perf or "\n_TBD_\n")
+        + "<!--PERF-END-->", "",
+    ]
+    MD.write_text("\n".join(out))
+    print(f"wrote {MD}")
+
+
+if __name__ == "__main__":
+    main()

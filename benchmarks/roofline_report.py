@@ -1,0 +1,64 @@
+"""§Roofline report: read experiments/dryrun/*.json, emit the per-cell
+three-term table (markdown + CSV rows for benchmarks.run)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh: str = "1pod-16x16"):
+    recs = []
+    d = DRYRUN / mesh
+    if not d.exists():
+        return recs
+    for f in sorted(d.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def markdown_table(mesh: str = "1pod-16x16") -> str:
+    rows = [
+        "| arch | cell | t_compute(s) | t_memory(s) | t_collective(s) | "
+        "bottleneck | MODEL/HLO | MFU-bound | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | - | - | - | - | - | - | "
+                f"{r['status']} |"
+            )
+            continue
+        rows.append(
+            "| {arch} | {cell} | {tc:.3f} | {tm:.3f} | {tx:.3f} | {bn} | "
+            "{ra:.3f} | {mfu:.4f} | ok |".format(
+                arch=r["arch"], cell=r["cell"], tc=r["t_compute"],
+                tm=r["t_memory"], tx=r["t_collective"], bn=r["bottleneck"],
+                ra=r["useful_flops_ratio"], mfu=r["mfu_bound"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def bench(mesh: str = "1pod-16x16"):
+    rows = []
+    for r in load(mesh):
+        if r["status"] == "ok":
+            rows.append(
+                (
+                    f"roofline/{r['arch']}/{r['cell']}",
+                    0.0,
+                    f"bneck={r['bottleneck']};mfu={r['mfu_bound']:.4f}",
+                )
+            )
+        else:
+            rows.append(
+                (f"roofline/{r['arch']}/{r['cell']}", 0.0, r["status"])
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table())

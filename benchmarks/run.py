@@ -1,0 +1,68 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV:
+  * bench_throughput — Table I (precision combos, decode throughput)
+  * bench_ber        — Fig. 13 (BER vs Eb/N0 per precision, + hard/soft)
+  * bench_radix      — §V/§VIII-C (radix-2 vs radix-4 Q counts & timing)
+  * bench_kernel     — Pallas ACS kernel vs oracle + survivor packing
+  * roofline_report  — §Roofline summary from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller workloads")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_ber,
+        bench_kernel,
+        bench_radix,
+        bench_throughput,
+        roofline_report,
+    )
+
+    suites = {
+        "throughput": lambda: bench_throughput.bench(
+            n_frames=512 if args.fast else 2048,
+            n_stages=64 if args.fast else 128,
+        ),
+        "ber": lambda: bench_ber.bench(
+            ebn0_dbs=(3.0, 4.0) if args.fast else (2.0, 3.0, 4.0),
+            n_bits=50_000 if args.fast else 400_000,
+        ),
+        "radix": lambda: bench_radix.bench(
+            n_frames=256 if args.fast else 1024,
+            n_stages=128 if args.fast else 256,
+        ),
+        "kernel": lambda: bench_kernel.bench(
+            n_frames=128 if args.fast else 512,
+            n_stages=32 if args.fast else 64,
+        ),
+        "roofline": roofline_report.bench,
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row))
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro: tensor-core Viterbi decoding (Mohammadidoost & Hashemi, 2020)
+re-built as a production-grade multi-pod JAX framework for TPU.
+
+Subpackages:
+  core        — the paper's contribution (trellis algebra, matrix-form ACS)
+  kernels     — Pallas TPU kernels (fused ACS) + jnp oracles
+  models      — assigned architecture zoo (dense/GQA/MoE/SSM/hybrid)
+  configs     — architecture configs (--arch <id>) + input shapes
+  data        — token + channel-LLR pipelines
+  optim       — AdamW, schedules, compressed gradients
+  train/serve — step functions
+  distributed — mesh axes & sharding rules (DP/FSDP/TP/EP/SP)
+  runtime     — checkpoint, failure detection, elastic re-mesh
+  launch      — mesh/dryrun/train/serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,180 @@
+"""Architecture configs (``--arch <id>``) and input-shape cells.
+
+Every assigned architecture gets one file in this package defining an
+``ArchConfig`` with the exact published numbers, plus a reduced
+``smoke_config()`` of the same family for CPU tests.  Input shapes are the
+four assigned LM cells; ``input_specs()`` returns ShapeDtypeStruct stand-ins
+(no allocation) for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ArchConfig", "ShapeCell", "SHAPE_CELLS", "input_specs", "pad_vocab"]
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return -(-v // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int  # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual: bool = False  # Arctic: dense FFN in parallel
+    capacity_factor: float = 1.25
+    # SSM (Mamba-2 SSD)
+    ssm_state: int = 0  # N
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64  # P
+    ssm_groups: int = 1  # G
+    ssm_conv_width: int = 4
+    # attention windowing
+    sliding_window: int = 0  # 0 = full attention
+    # modality frontend stub: prefix embeddings prepended to the sequence
+    frontend: Optional[str] = None  # None | "audio" | "vision"
+    prefix_len: int = 0
+    # numerics / training
+    norm_eps: float = 1e-5
+    param_dtype: str = "float32"
+    activation_dtype: str = "bfloat16"
+    kv_cache_dtype: str = "bfloat16"  # "int8": quantized KV cache with
+    # per-(token, head) scales — halves decode cache memory & read traffic
+    decode_ring_write: bool = True  # §Perf A2: masked ring-write (shards
+    # over a seq-sharded cache); False = dynamic-update-slice (baseline,
+    # involuntary full remat under GSPMD when seq is sharded)
+    decode_deferred_write: bool = True  # §Perf A3: the layer scan never
+    # writes the cache — the current token rides a separate self-term in
+    # the softmax and the stacked cache is written ONCE outside the loop
+    zero3_gather_at_use: bool = False  # §Perf B2 (REFUTED — keep False):
+    # constraining weights to TP-only sharding at the einsum was meant to
+    # force ZeRO-3 weight all-gathers instead of activation partial-sums,
+    # but the constraint back-propagates onto the activations and
+    # replicates the batch: tx 91s -> 449s, tc 2.8s -> 38s on mixtral
+    # train_4k.  Left in place as a documented negative result.
+    remat: bool = True
+    seq_parallel: bool = True  # Megatron-SP: shard the residual stream's
+    # sequence dim over "model" between layers (train mode)
+    attn_chunk: int = 512  # chunked attention block (long sequences)
+    dense_attn_max: int = 2048  # use dense attention at/below this seq len
+    causal_skip: bool = False  # §Perf: skip non-causal chunk pairs
+    ssm_chunk: int = 128
+
+    # -- derived --
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def d_inner(self) -> int:  # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def attn_free(self) -> bool:
+        return self.n_heads == 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k cell (see DESIGN.md §4)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + stacked layers + head)."""
+        D, F, L, V = self.d_model, self.d_ff, self.n_layers, self.padded_vocab
+        hd = self.head_dim_
+        p = V * D * 2  # embed + untied head
+        per_layer = 0
+        if not self.attn_free:
+            qkv = D * hd * (self.n_heads + 2 * self.n_kv_heads)
+            per_layer += qkv + self.n_heads * hd * D
+            if self.qkv_bias:
+                per_layer += hd * (self.n_heads + 2 * self.n_kv_heads)
+        if self.family in ("ssm", "hybrid"):
+            di, G, N, H = self.d_inner, self.ssm_groups, self.ssm_state, self.ssm_heads
+            in_proj = D * (2 * di + 2 * G * N + H)
+            conv = self.ssm_conv_width * (di + 2 * G * N)
+            per_layer += in_proj + conv + di * D + 2 * H + di
+        if self.n_experts:
+            per_layer += D * self.n_experts + self.n_experts * 3 * D * F
+            if self.moe_dense_residual:
+                per_layer += 3 * D * F
+        elif F:
+            per_layer += 3 * D * F
+        per_layer += 2 * D  # norms
+        return p + L * per_layer + D
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        full_moe = L * self.n_experts * 3 * D * F
+        active_moe = L * self.experts_per_token * 3 * D * F
+        return self.n_params() - full_moe + active_moe
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, cell: ShapeCell) -> bool:
+    """long_500k needs sub-quadratic attention (assignment rule)."""
+    if cell.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    i32 = jnp.int32
+    B, S = cell.global_batch, cell.seq_len
+    S_tok = S - cfg.prefix_len
+    specs = {}
+    if cell.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S_tok), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S_tok), i32)
+    elif cell.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S_tok), i32)
+    else:  # decode: one new token against a seq_len-deep cache
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+    if cfg.prefix_len and cell.kind != "decode":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.prefix_len, cfg.d_model), jnp.bfloat16
+        )
+    return specs

@@ -1,0 +1,92 @@
+"""viterbi-k7 — the paper's own workload as a first-class config (§IX-A):
+code (2,1,7), polynomials (171,133) octal, soft-decision, radix-4 packed
+tensor-ACS, frame tiling f=64 / v=32.
+
+serve_step = tiled tensor-ACS decode of a batch of LLR streams; dry-run and
+rooflined on the same production meshes as the LM architectures.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CODE_K7_CCSDS, CodeSpec, TiledDecoderConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ViterbiConfig:
+    name: str = "viterbi-k7"
+    family: str = "viterbi"
+    spec: CodeSpec = CODE_K7_CCSDS
+    rho: int = 2
+    frame_len: int = 64
+    overlap: int = 32
+    # serving shapes: a batch of independent LLR streams
+    stream_len: int = 1 << 16  # stages per stream
+    batch_streams: int = 512
+    # §Perf C knobs (paper Table I / output compaction analogues)
+    channel_bf16: bool = False  # C1: bf16 LLR blocks + matmul inputs
+    pack_survivors: bool = False  # C2: 16 x 2-bit survivors per int32
+    renorm: bool = True  # C3: per-step path-metric renormalization
+    split_dot: bool = False  # C5: bf16 branch metrics + f32 metric routing
+
+    @property
+    def tiled(self) -> TiledDecoderConfig:
+        return TiledDecoderConfig(
+            frame_len=self.frame_len, overlap=self.overlap, rho=self.rho
+        )
+
+    @property
+    def precision(self):
+        from repro.core.viterbi import AcsPrecision
+        import jax.numpy as jnp
+
+        if self.channel_bf16:
+            return AcsPrecision(
+                matmul_dtype=jnp.bfloat16,
+                channel_dtype=jnp.bfloat16,
+                renorm=self.renorm,
+                split_dot=self.split_dot,
+            )
+        return AcsPrecision(renorm=self.renorm, split_dot=self.split_dot)
+
+
+CONFIG = ViterbiConfig()  # paper-faithful baseline (Table I single-prec)
+
+# §Perf C4b: the adopted optimized service config — bf16 channel, packed
+# survivors, f=128 frames; BER bit-identical to baseline (EXPERIMENTS.md)
+CONFIG_OPTIMIZED = ViterbiConfig(
+    name="viterbi-k7-opt",
+    frame_len=128,
+    channel_bf16=True,
+    pack_survivors=True,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ViterbiCell:
+    name: str
+    stream_len: int
+    batch_streams: int
+    kind: str = "decode"
+
+
+# the paper's workload cells: short LTE-like blocks up to DVB-like streams
+VITERBI_CELLS = {
+    "decode_64k": ViterbiCell("decode_64k", 1 << 16, 512),
+    "decode_1m": ViterbiCell("decode_1m", 1 << 20, 32),
+}
+
+
+def input_specs(cfg: ViterbiConfig, cell: ViterbiCell):
+    return {
+        "llrs": jax.ShapeDtypeStruct(
+            (cell.batch_streams, cell.stream_len, cfg.spec.beta), jnp.float32
+        )
+    }
+
+
+def smoke_config() -> ViterbiConfig:
+    return ViterbiConfig(
+        name="viterbi-k7-smoke", stream_len=512, batch_streams=4
+    )

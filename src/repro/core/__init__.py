@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution (tensor-formulated Viterbi)."""
+from .trellis import (  # noqa: F401
+    AcsTables,
+    CodeSpec,
+    CODE_K7_CCSDS,
+    build_acs_tables,
+    build_transitions,
+    butterfly_states,
+    dragonfly_groups,
+    dragonfly_state,
+    dragonfly_theta,
+)
+from .viterbi import (  # noqa: F401
+    AcsPrecision,
+    TiledDecoderConfig,
+    decode_frames,
+    forward_fused,
+    tiled_decode_stream,
+    traceback,
+)
+from .encoder import conv_encode, conv_encode_jax, tail_flush  # noqa: F401
+from .viterbi_ref import viterbi_decode_ref  # noqa: F401

@@ -1,0 +1,89 @@
+"""BER measurement harness (paper §IX-B, Fig. 12 block diagram).
+
+transmitter (random bits -> conv encoder) -> AWGN channel -> receiver
+(LLR former -> Viterbi decoder) -> compare with the source bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import channel as ch
+from .encoder import conv_encode_jax
+from .trellis import CodeSpec
+from .viterbi import AcsPrecision, TiledDecoderConfig, tiled_decode_stream
+
+__all__ = ["BerPoint", "measure_ber", "ber_curve", "uncoded_ber_theory"]
+
+
+@dataclasses.dataclass
+class BerPoint:
+    ebn0_db: float
+    n_bits: int
+    n_errors: int
+
+    @property
+    def ber(self) -> float:
+        return self.n_errors / max(self.n_bits, 1)
+
+    @property
+    def reliable(self) -> bool:
+        """Paper's rule of thumb: BER > 100/n is trustworthy."""
+        return self.n_errors >= 100
+
+
+def uncoded_ber_theory(ebn0_db: float) -> float:
+    """Q(sqrt(2 Eb/N0)) — uncoded BPSK reference curve."""
+    from math import erfc, sqrt
+
+    ebn0 = 10.0 ** (ebn0_db / 10.0)
+    return 0.5 * erfc(sqrt(ebn0))
+
+
+def measure_ber(
+    spec: CodeSpec,
+    ebn0_db: float,
+    n_bits: int,
+    key: jax.Array,
+    cfg: TiledDecoderConfig = TiledDecoderConfig(),
+    precision: AcsPrecision = AcsPrecision(),
+    hard: bool = False,
+    use_kernel: bool = False,
+    decoder: Optional[Callable] = None,
+) -> BerPoint:
+    """One point of the Fig. 12 verification pipeline."""
+    kb, kn = jax.random.split(key)
+    bits = jax.random.bernoulli(kb, 0.5, (n_bits,)).astype(jnp.int32)
+    coded = conv_encode_jax(bits, spec)  # (n, beta)
+    sym = ch.bpsk(coded)
+    rx = ch.awgn(kn, sym, ebn0_db, spec.rate)
+    if hard:
+        llrs = ch.hard_decision(rx)
+    else:
+        llrs = ch.llr(rx, ebn0_db, spec.rate)
+    llrs = llrs.astype(precision.channel_dtype).astype(jnp.float32)
+    if decoder is None:
+        decoded = tiled_decode_stream(
+            llrs, spec, cfg, precision=precision, use_kernel=use_kernel
+        )
+    else:
+        decoded = decoder(llrs)
+    n_err = int(jnp.sum(decoded[:n_bits] != bits))
+    return BerPoint(ebn0_db=ebn0_db, n_bits=n_bits, n_errors=n_err)
+
+
+def ber_curve(
+    spec: CodeSpec,
+    ebn0_dbs: Sequence[float],
+    n_bits: int,
+    seed: int = 0,
+    **kw,
+) -> list:
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(ebn0_dbs))
+    return [
+        measure_ber(spec, e, n_bits, k, **kw) for e, k in zip(ebn0_dbs, keys)
+    ]

@@ -1,0 +1,44 @@
+"""BPSK + AWGN channel and LLR formation (paper §IX-B, Fig. 12).
+
+The paper simulates the channel by BPSK-modulating the coded bits and adding
+white Gaussian noise at a given Eb/N0.  We use the textbook calibration
+    sigma^2 = 1 / (2 * rate * 10^(EbN0_dB/10))
+for unit-energy symbols (the paper's §IX-B prose gives an equivalent
+power-law expression).  The decoder input LLR is 2y/sigma^2; any positive
+scaling of the LLRs leaves the Viterbi max-path unchanged, so throughput
+benchmarks may feed raw ``y``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["bpsk", "awgn_sigma", "awgn", "llr", "hard_decision"]
+
+
+def bpsk(bits):
+    """Map bit 0 -> +1.0, bit 1 -> -1.0 (matches Eq. 2's (-1)^alpha)."""
+    return 1.0 - 2.0 * jnp.asarray(bits, dtype=jnp.float32)
+
+
+def awgn_sigma(ebn0_db: float, rate: float) -> float:
+    """Noise standard deviation for unit-energy BPSK at the given Eb/N0."""
+    ebn0 = 10.0 ** (ebn0_db / 10.0)
+    return float(np.sqrt(1.0 / (2.0 * rate * ebn0)))
+
+
+def awgn(key, symbols, ebn0_db: float, rate: float):
+    sigma = awgn_sigma(ebn0_db, rate)
+    return symbols + sigma * jax.random.normal(key, symbols.shape, symbols.dtype)
+
+
+def llr(received, ebn0_db: float, rate: float):
+    """Soft-decision LLR (positive => bit 0 more likely), paper §II-C."""
+    sigma = awgn_sigma(ebn0_db, rate)
+    return 2.0 * received / (sigma * sigma)
+
+
+def hard_decision(received):
+    """Hard-decision front-end: +-1 from the sign (paper §II-C)."""
+    return jnp.where(received >= 0, 1.0, -1.0)

@@ -1,0 +1,56 @@
+"""Convolutional encoder (paper §II-A, Fig. 1a).
+
+Two implementations with identical semantics:
+  * ``conv_encode`` — numpy, host-side (test oracle / data generation).
+  * ``conv_encode_jax`` — ``jax.lax.scan`` over the precomputed FSM tables,
+    jit/vmap-friendly (used by the channel-coded data pipeline).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .trellis import CodeSpec, build_transitions
+
+__all__ = ["conv_encode", "conv_encode_jax", "tail_flush"]
+
+
+def tail_flush(bits: np.ndarray, spec: CodeSpec) -> np.ndarray:
+    """Append k-1 zero bits so the encoder FSM terminates in state 0."""
+    return np.concatenate([np.asarray(bits), np.zeros(spec.k - 1, dtype=np.int64)])
+
+
+def conv_encode(bits, spec: CodeSpec, initial_state: int = 0) -> np.ndarray:
+    """Encode a bit vector. Returns (n, beta) array of 0/1 output bits."""
+    tr = build_transitions(spec)
+    bits = np.asarray(bits, dtype=np.int64)
+    out = np.zeros((bits.shape[0], spec.beta), dtype=np.int64)
+    s = initial_state
+    for t, u in enumerate(bits):
+        out[t] = tr.out_bits[s, u]
+        s = int(tr.next_state[s, u])
+    return out
+
+
+def conv_encode_jax(bits: jnp.ndarray, spec: CodeSpec, initial_state: int = 0):
+    """JAX encoder: bits (..., n) int32 -> (..., n, beta) int32.
+
+    Batched over leading dims via vmap-compatible scan.
+    """
+    tr = build_transitions(spec)
+    next_state = jnp.asarray(tr.next_state, dtype=jnp.int32)
+    out_bits = jnp.asarray(tr.out_bits, dtype=jnp.int32)
+
+    def encode_one(seq):
+        def step(s, u):
+            return next_state[s, u], out_bits[s, u]
+
+        _, outs = jax.lax.scan(step, jnp.int32(initial_state), seq)
+        return outs
+
+    batch_dims = bits.ndim - 1
+    fn = encode_one
+    for _ in range(batch_dims):
+        fn = jax.vmap(fn)
+    return fn(bits.astype(jnp.int32))

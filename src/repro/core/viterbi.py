@@ -1,0 +1,283 @@
+"""Matrix-form Viterbi decoding (paper §V, §VIII) in JAX.
+
+The forward ACS recursion is expressed as ONE fused matmul per radix-2^rho
+step (DESIGN.md §2), the TPU-native generalization of the paper's packed
+16x16 tensor op (Fig. 15):
+
+    potentials = [L_t | Lambda_{t-rho}] @ [Theta-hat^T ; P]     (MXU)
+    Lambda_t   = max_slots   potentials                         (VPU)
+    phi_t      = argmax_slots potentials                        (VPU)
+
+  * rho = 1 reproduces the paper's radix-2 butterfly formulation (Eq. 16-22),
+  * rho = 2 reproduces the radix-4 super-branch formulation (Eq. 33-35); the
+    predecessor one-hot P plays the role of the paper's dragonfly-group
+    permutation (§VIII-D) and works for ANY (k, beta, polys).
+
+Frames are batched on the leading axis so that on TPU they occupy the
+128-wide lane dimension of the MXU (frames-in-lanes, DESIGN.md §2).
+
+Precision: the paper's Fig. 13 study maps to `AcsPrecision` — matmul inputs
+may be bf16 (paper: fp16 A/B), the accumulated path-metric carry must be f32
+(paper: fp32 C) or BER degrades; both choices are reproduced in
+benchmarks/bench_ber.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .trellis import AcsTables, CodeSpec, build_acs_tables
+
+__all__ = [
+    "AcsPrecision",
+    "forward_fused",
+    "traceback",
+    "decode_frames",
+    "TiledDecoderConfig",
+    "tiled_decode_stream",
+    "blocks_from_llrs",
+]
+
+NEG = jnp.float32(-1.0e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class AcsPrecision:
+    """Precision knobs mirroring the paper's Table I / Fig. 13 axes."""
+
+    matmul_dtype: jnp.dtype = jnp.float32  # A/B operands (paper: half)
+    carry_dtype: jnp.dtype = jnp.float32  # accumulated path metric (paper: C)
+    channel_dtype: jnp.dtype = jnp.float32  # LLR storage (paper: 'channel')
+    renorm: bool = True  # subtract per-frame max every step
+    split_dot: bool = False  # §Perf C5: branch metrics in bf16 on the MXU
+    # + path-metric routing (Lambda @ P) in f32 — keeps the carry exact so
+    # renorm can be dropped without the bf16xno-renorm BER interaction
+
+    def label(self) -> str:
+        short = {jnp.float32: "f32", jnp.bfloat16: "bf16", jnp.float16: "f16"}
+        return (
+            f"C={short.get(self.carry_dtype, self.carry_dtype)}"
+            f",ch={short.get(self.channel_dtype, self.channel_dtype)}"
+        )
+
+
+def blocks_from_llrs(llrs: jnp.ndarray, rho: int) -> jnp.ndarray:
+    """(F, n, beta) LLRs -> (T', F, rho*beta) fused-step blocks.
+
+    n must be divisible by rho (pad with zero LLRs beforehand — a zero LLR
+    carries no information and does not bias the path metrics).
+    """
+    F, n, beta = llrs.shape
+    if n % rho:
+        raise ValueError(f"n={n} not divisible by rho={rho}")
+    t = n // rho
+    # stage-major flattening matches trellis.superbranch_output_bits order
+    blocks = llrs.reshape(F, t, rho * beta)
+    return jnp.transpose(blocks, (1, 0, 2))
+
+
+def init_metric(n_frames: int, n_states: int, initial_state: Optional[int]):
+    """Metric at t=0: one-hot (known encoder start) or uniform (truncated)."""
+    if initial_state is None:
+        return jnp.zeros((n_frames, n_states), jnp.float32)
+    lam = jnp.full((n_frames, n_states), NEG, jnp.float32)
+    return lam.at[:, initial_state].set(0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tables", "precision", "use_kernel", "pack_survivors"),
+)
+def forward_fused(
+    blocks: jnp.ndarray,
+    lam0: jnp.ndarray,
+    tables: AcsTables,
+    precision: AcsPrecision = AcsPrecision(),
+    use_kernel: bool = False,
+    pack_survivors: bool = False,
+):
+    """Fused forward procedure.
+
+    blocks: (T', F, rho*beta); lam0: (F, S).
+    Returns (lam_final (F, S) f32, phis) with phis (T', F, S) int8 slots,
+    or (T', F, S//16) int32 when ``pack_survivors`` (§Perf C2 — the
+    paper's 32-bit output compaction applied to the survivor store).
+    """
+    if use_kernel:  # pragma: no cover - exercised via kernels tests
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.viterbi_forward(
+            blocks, lam0, tables, precision
+        )
+
+    W = jnp.asarray(tables.fused_w, precision.matmul_dtype)  # (B+S, S*R)
+    S, R = tables.n_states, tables.n_slots
+    B = tables.llr_block
+    W_theta = jnp.asarray(tables.theta_t, precision.matmul_dtype)
+    W_pred = jnp.asarray(tables.pred_onehot, jnp.float32)
+    blocks = blocks.astype(precision.channel_dtype)
+    bits = {2: 1, 4: 2, 8: 3, 16: 4}[R]
+
+    def step(lam, l_t):
+        if precision.split_dot:
+            pot = jnp.dot(
+                l_t.astype(precision.matmul_dtype),
+                W_theta,
+                preferred_element_type=jnp.float32,
+            ) + jnp.dot(
+                lam.astype(jnp.float32), W_pred,
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            x = jnp.concatenate(
+                [l_t.astype(precision.matmul_dtype),
+                 lam.astype(precision.matmul_dtype)],
+                axis=1,
+            )
+            pot = jnp.dot(
+                x, W, preferred_element_type=jnp.float32
+            )  # MXU: f32 accumulate
+        pot = pot.reshape(lam.shape[0], S, R)
+        new_lam = jnp.max(pot, axis=-1)
+        phi = jnp.argmax(pot, axis=-1)
+        if pack_survivors:
+            grp = phi.reshape(phi.shape[0], S // 16, 16).astype(jnp.int32)
+            shifts = bits * jnp.arange(16, dtype=jnp.int32)
+            phi = jnp.sum(grp << shifts, axis=-1).astype(jnp.int32)
+        else:
+            phi = phi.astype(jnp.int8)
+        if precision.renorm:
+            new_lam = new_lam - jnp.max(new_lam, axis=-1, keepdims=True)
+        new_lam = new_lam.astype(precision.carry_dtype)
+        return new_lam, phi
+
+    lam_final, phis = jax.lax.scan(step, lam0.astype(precision.carry_dtype), blocks)
+    return lam_final.astype(jnp.float32), phis
+
+
+@functools.partial(jax.jit, static_argnames=("tables",))
+def traceback(
+    phis: jnp.ndarray, final_state: jnp.ndarray, tables: AcsTables
+):
+    """Vectorized Algorithm 2 over frames, one radix step at a time.
+
+    phis: (T', F, S) int8 slots OR (T', F, S//16) int32 packed (§Perf C2
+    — unpacked lazily per step, never materialized); final_state: (F,).
+    Returns decoded bits (F, T'*rho) int32 — the survivor path's branch
+    inputs, which for this FSM are the top rho bits of each visited state
+    (chronological order = LSB-first of that field, see trellis.py).
+    """
+    k, rho = tables.spec.k, tables.rho
+    mask = (1 << (k - 1 - rho)) - 1
+    packed = phis.dtype == jnp.int32
+    slot_bits = {2: 1, 4: 2, 8: 3, 16: 4}[tables.n_slots]
+
+    def step(j, phi_t):
+        if packed:
+            word = jnp.take_along_axis(phi_t, (j // 16)[:, None], axis=1)
+            slot = (word[:, 0] >> (slot_bits * (j % 16))) & (
+                tables.n_slots - 1
+            )
+        else:
+            slot = jnp.take_along_axis(
+                phi_t.astype(jnp.int32), j[:, None], axis=1
+            )[:, 0]
+        v = j >> (k - 1 - rho)  # the rho decoded bits of this step
+        pred = ((j & mask) << rho) | slot
+        return pred, v
+
+    _, vs = jax.lax.scan(step, final_state.astype(jnp.int32), phis, reverse=True)
+    # vs: (T', F) -> bits (F, T'*rho), chronological within each block
+    bits = (vs[..., None] >> jnp.arange(rho)) & 1  # (T', F, rho)
+    return jnp.transpose(bits, (1, 0, 2)).reshape(final_state.shape[0], -1)
+
+
+def decode_frames(
+    llrs: jnp.ndarray,
+    spec: CodeSpec,
+    rho: int = 2,
+    initial_state: Optional[int] = 0,
+    final_state: Optional[int] = None,
+    precision: AcsPrecision = AcsPrecision(),
+    use_kernel: bool = False,
+    pack_survivors: bool = False,
+):
+    """Decode a batch of independent frames.  llrs: (F, n, beta)."""
+    tables = build_acs_tables(spec, rho)
+    blocks = blocks_from_llrs(jnp.asarray(llrs), rho)
+    lam0 = init_metric(llrs.shape[0], spec.n_states, initial_state)
+    lam, phis = forward_fused(
+        blocks, lam0, tables, precision, use_kernel, pack_survivors
+    )
+    if final_state is None:
+        fs = jnp.argmax(lam, axis=-1).astype(jnp.int32)
+    else:
+        fs = jnp.full((llrs.shape[0],), final_state, jnp.int32)
+    return traceback(phis, fs, tables)
+
+
+# ---------------------------------------------------------------------------
+# Tiled stream decoder (paper §III tiling scheme + our frames-in-lanes batch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TiledDecoderConfig:
+    """Frame tiling (paper §III): each frame decodes `frame_len` bits and
+    carries `overlap` stages of history on BOTH sides (Eq. 5's v)."""
+
+    frame_len: int = 64
+    overlap: int = 32
+    rho: int = 2
+
+    def __post_init__(self):
+        if (self.frame_len + 2 * self.overlap) % self.rho:
+            raise ValueError("frame_len + 2*overlap must be divisible by rho")
+        if self.frame_len % self.rho:
+            raise ValueError("frame_len must be divisible by rho")
+
+    @property
+    def window(self) -> int:
+        return self.frame_len + 2 * self.overlap
+
+
+def tiled_decode_stream(
+    llrs: jnp.ndarray,
+    spec: CodeSpec,
+    cfg: TiledDecoderConfig = TiledDecoderConfig(),
+    precision: AcsPrecision = AcsPrecision(),
+    use_kernel: bool = False,
+    pack_survivors: bool = False,
+) -> jnp.ndarray:
+    """Decode one long LLR stream (n, beta) via overlapping parallel frames.
+
+    The stream is zero-LLR padded by `overlap` on both ends, sliced into
+    n/frame_len windows of length frame_len + 2*overlap, all windows decoded
+    in parallel (truncated Viterbi: uniform start metric, argmax end state),
+    and the center frame_len decisions of each window are stitched together.
+    """
+    n, beta = llrs.shape
+    f, v = cfg.frame_len, cfg.overlap
+    n_frames = -(-n // f)  # ceil
+    padded_len = n_frames * f + 2 * v
+    pad_lo = v
+    pad_hi = padded_len - n - v
+    padded = jnp.pad(jnp.asarray(llrs), ((pad_lo, pad_hi), (0, 0)))
+    idx = jnp.arange(n_frames)[:, None] * f + jnp.arange(cfg.window)[None, :]
+    frames = padded[idx]  # (n_frames, window, beta)
+    decoded = decode_frames(
+        frames,
+        spec,
+        rho=cfg.rho,
+        initial_state=None,
+        final_state=None,
+        precision=precision,
+        use_kernel=use_kernel,
+        pack_survivors=pack_survivors,
+    )
+    center = decoded[:, v : v + f]  # (n_frames, f)
+    return center.reshape(-1)[:n]

@@ -1,0 +1,291 @@
+"""Sharding rules: param/optimizer/activation PartitionSpecs per arch.
+
+Strategy (DESIGN.md §5):
+  * ZeRO-3/FSDP: every weight is sharded over the ``data`` axis on one
+    large dim AND over ``model`` on the TP dim (head/ffn/expert).
+  * a dim is only sharded if divisible by the axis size — otherwise that
+    dim stays replicated (``_maybe``), which keeps odd head counts
+    (qwen's 40 q-heads, hymba's 50 SSM heads) legal without GSPMD padding
+    pathologies;
+  * MoE experts go over ``model`` (EP) when E divides it, else the expert
+    FFN dim is TP-sharded;
+  * batch goes over (pod, data); when batch==1 (long-context decode) the
+    cache sequence dim is context-parallel over ``data``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.mesh import dp_axes
+
+__all__ = [
+    "axis_size",
+    "param_specs",
+    "batch_specs",
+    "cache_partition_specs",
+    "named",
+    "train_state_shardings",
+    "constrain",
+]
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint against the AMBIENT mesh, if any.
+
+    Model/loss code stays mesh-agnostic: under ``with mesh:`` this pins the
+    activation sharding (e.g. logits (batch, seq, vocab) ->
+    (dp, None, "model")); with no mesh (CPU unit tests) it is a no-op.
+    Axis names not present in the ambient mesh, and dims not divisible by
+    the axis size, are dropped.
+    """
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+
+    def ok(a, dim):
+        flat = tuple(
+            f for f in (a if isinstance(a, tuple) else (a,)) if f in names
+        )
+        if not flat:
+            return None
+        size = 1
+        for f in flat:
+            size *= mesh.shape[f]
+        if dim % size:
+            return None
+        return flat if len(flat) > 1 else flat[0]
+
+    resolved = [
+        None if a is None else ok(a, x.shape[i]) for i, a in enumerate(axes)
+    ]
+    resolved += [None] * (x.ndim - len(resolved))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _maybe(mesh, axis: Optional[str], dim: int):
+    """Shard `dim` over `axis` only when divisible (else replicate)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= axis_size(mesh, a)
+    else:
+        size = axis_size(mesh, axis)
+    return axis if size > 1 and dim % size == 0 else None
+
+
+def kv_cache_constraint(x, n_kv_heads: int, head_dim: int):
+    """Pin a per-layer KV cache slice (B, Sc, KV, hd) to its canonical
+    sharding under the ambient mesh: batch over (pod, data); ONE of
+    {kv-heads, head_dim, seq} over "model" (first divisible, in that
+    order — mirrors cache_partition_specs).  §Perf A1: without this pin
+    GSPMD reshards the cache to seq-sharded for the attention einsum,
+    which turns the per-token dynamic-update-slice into an involuntary
+    full rematerialization of the cache EVERY layer."""
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    if mesh.empty or "model" not in mesh.axis_names:
+        return x
+    model = mesh.shape["model"]
+    b, sc, kv, hd = x.shape
+    if kv % model == 0:
+        spec = (None, None, "model", None)
+    else:
+        # seq-sharded (context-parallel) cache: the scores einsum, the
+        # softmax partials and the masked ring-write are all shard-local
+        spec = (None, "model", None, None)
+    return constrain(x, ("pod", "data"), *spec[1:])
+
+
+def param_specs(cfg: ArchConfig, mesh, params_shape) -> dict:
+    """PartitionSpec pytree matching the parameter pytree.
+
+    params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape) or
+    arrays — only .shape is used.
+    """
+    dp = dp_axes(mesh)
+    fsdp = dp[-1] if dp else None  # intra-pod data axis carries FSDP
+
+    def leaf_spec(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        shape = leaf.shape
+        nd = len(shape)
+
+        def mk(*axes):
+            axes = list(axes) + [None] * (nd - len(axes))
+            resolved = [
+                _maybe(mesh, a, shape[i]) if a else None
+                for i, a in enumerate(axes)
+            ]
+            return P(*resolved)
+
+        if name == "embed":  # (V, D)
+            return mk("model", fsdp)
+        if name == "lm_head":  # (D, V)
+            return mk(fsdp, "model")
+        if name == "final_norm":
+            return P()
+        if "moe" in keys:
+            E = cfg.n_experts
+            ep = E % axis_size(mesh, "model") == 0
+            if name == "router":  # (L, D, E)
+                return mk(None, fsdp, None)
+            if name in ("w_gate", "w_up"):  # (L, E, D, F)
+                return mk(None, "model", fsdp, None) if ep else mk(
+                    None, None, fsdp, "model"
+                )
+            if name == "w_down":  # (L, E, F, D)
+                return mk(None, "model", None, fsdp) if ep else mk(
+                    None, None, "model", fsdp
+                )
+        if "attn" in keys:
+            if name in ("wq", "wk", "wv"):  # (L, D, H*hd)
+                return mk(None, fsdp, "model")
+            if name == "wo":  # (L, H*hd, D)
+                return mk(None, "model", fsdp)
+            if name in ("bq", "bk", "bv"):  # (L, H*hd)
+                return mk(None, "model")
+        if "ssm" in keys:
+            if name == "in_proj":  # (L, D, E_in)
+                return mk(None, fsdp, "model")
+            if name == "out_proj":  # (L, d_inner, D)
+                return mk(None, "model", fsdp)
+            if name in ("conv_w",):  # (L, W, CD)
+                return mk(None, None, "model")
+            if name in ("conv_b", "norm"):  # (L, CD) / (L, d_inner)
+                return mk(None, "model")
+            if name in ("A_log", "D", "dt_bias"):  # (L, H)
+                return mk(None, "model")
+        if "mlp" in keys or "res" in keys:
+            if name in ("w_gate", "w_up"):  # (L, D, F)
+                return mk(None, fsdp, "model")
+            if name == "w_down":  # (L, F, D)
+                return mk(None, "model", fsdp)
+        if name in ("norm1", "norm2", "beta_a", "beta_m"):  # (L, D)
+            return mk(None, fsdp)
+        return P()  # replicate anything unrecognized
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def batch_specs(cfg: ArchConfig, mesh, cell: ShapeCell) -> dict:
+    """PartitionSpecs for the input batch dict of this cell."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axis_size(mesh, a)
+    bspec = dp if cell.global_batch % dp_size == 0 else None
+    out = {"tokens": P(bspec, None)}
+    if cell.kind == "train":
+        out["labels"] = P(bspec, None)
+    if cfg.prefix_len and cell.kind != "decode":
+        out["prefix_embeds"] = P(bspec, None, None)
+    return out
+
+
+def cache_partition_specs(cfg: ArchConfig, mesh, batch: int) -> dict:
+    """Decode-cache specs.
+
+    batch: sharded over (pod, data) when divisible, else the cache
+    sequence goes context-parallel over ``data``.
+    kv heads: sharded over ``model`` when divisible (musicgen's 32, qwen's
+    40 is not); otherwise the SEQUENCE dim takes the ``model`` axis — a
+    context-parallel cache whose partial-softmax reductions GSPMD turns
+    into two scalar-sized all-reduces per layer (cheap), while cutting
+    per-device cache memory by the model-axis width.
+    """
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axis_size(mesh, a)
+    batch_ok = batch % dp_size == 0
+    b_ax = dp if batch_ok else None
+    model = axis_size(mesh, "model")
+    kv_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % model == 0
+    specs = {"pos": P()}
+    if cfg.n_heads > 0:
+        if kv_ok:
+            seq_ax = None if batch_ok else "data"
+            kv_ax = "model"
+        else:
+            # §Perf A2: context-parallel cache (seq over "model") with a
+            # masked ring-write in the model — a dynamic-update-slice over
+            # the sharded seq dim would be an involuntary full remat.
+            seq_ax = "model" if batch_ok else ("data", "model")
+            kv_ax = None
+        # (L, B, Sc, KV, hd)
+        specs["k"] = P(None, b_ax, seq_ax, kv_ax, None)
+        specs["v"] = P(None, b_ax, seq_ax, kv_ax, None)
+        if cfg.kv_cache_dtype == "int8":  # (L, B, Sc, KV) dequant scales
+            specs["k_scale"] = P(None, b_ax, seq_ax, kv_ax)
+            specs["v_scale"] = P(None, b_ax, seq_ax, kv_ax)
+    if cfg.family in ("ssm", "hybrid"):
+        # (L, B, H, P, N): heads over model when divisible (mamba2's 32),
+        # else the SSD head_dim P (hymba: H=50, P=64)
+        h_ax = "model" if cfg.ssm_heads % model == 0 else None
+        p_ax = (
+            None
+            if h_ax
+            else ("model" if cfg.ssm_head_dim % model == 0 else None)
+        )
+        specs["ssm"] = P(None, b_ax, h_ax, p_ax, None)
+        cd = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        specs["conv"] = P(
+            None, b_ax, None, "model" if cd % model == 0 else None
+        )
+    return specs
+
+
+def _fix_divisibility(spec_tree, shape_tree, mesh):
+    """Drop any spec axis that does not divide its dim (safety net)."""
+
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        out = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= axis_size(mesh, a)
+            out.append(ax if leaf.shape[i] % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, shape_tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def train_state_shardings(cfg: ArchConfig, mesh, params_shape, opt_shape):
+    """(param_shardings, opt_shardings) — opt m/v inherit the param specs."""
+    pspecs = param_specs(cfg, mesh, params_shape)
+    pspecs = _fix_divisibility(pspecs, params_shape, mesh)
+    from repro.optim.adamw import OptState
+
+    opt_specs = OptState(step=P(), m=pspecs, v=pspecs)
+    return named(mesh, pspecs), named(mesh, opt_specs)

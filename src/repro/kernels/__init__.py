@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (fused Viterbi ACS).
+
+Layout per the repo convention: <name>.py (pallas_call + BlockSpec),
+ops.py (jit'd public wrappers), ref.py (pure-jnp oracles).
+"""
+from .ops import viterbi_forward  # noqa: F401
+from .viterbi_acs import acs_forward_pallas, unpack_survivors  # noqa: F401

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers binding the Pallas ACS kernel to core.viterbi.
+
+``viterbi_forward`` is plug-compatible with core.viterbi.forward_fused and
+is selected there via ``use_kernel=True``.  On CPU the kernel body runs in
+interpret mode (Python emulation of the TPU lowering); on TPU it compiles to
+a Mosaic kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trellis import AcsTables
+from . import viterbi_acs
+from .viterbi_acs import acs_forward_pallas, unpack_survivors
+
+__all__ = ["viterbi_forward", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def viterbi_forward(
+    blocks: jnp.ndarray,  # (T, F, B)
+    lam0: jnp.ndarray,  # (F, S)
+    tables: AcsTables,
+    precision=None,
+    *,
+    block_frames: int = viterbi_acs.DEFAULT_BLOCK_FRAMES,
+    pack_survivors: bool = False,
+):
+    """Pallas-backed fused forward.  Returns (lam (F,S) f32, phi (T,F,S) i8)."""
+    from repro.core.viterbi import AcsPrecision
+
+    precision = precision or AcsPrecision()
+    w = jnp.asarray(tables.fused_w)
+    lam, phi = acs_forward_pallas(
+        blocks,
+        lam0,
+        w,
+        n_states=tables.n_states,
+        n_slots=tables.n_slots,
+        block_frames=block_frames,
+        carry_dtype=precision.carry_dtype,
+        matmul_dtype=precision.matmul_dtype,
+        renorm=precision.renorm,
+        pack_survivors=pack_survivors,
+        interpret=not on_tpu(),
+    )
+    if pack_survivors:
+        phi = unpack_survivors(phi, tables.n_states, tables.n_slots)
+    return lam, phi

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the Pallas ACS kernel (same contract, no pallas)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["acs_forward_ref"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_states", "n_slots", "carry_dtype", "matmul_dtype", "renorm"
+    ),
+)
+def acs_forward_ref(
+    blocks: jnp.ndarray,  # (T, F, B)
+    lam0: jnp.ndarray,  # (F, S)
+    w: jnp.ndarray,  # (B+S, S*R)
+    *,
+    n_states: int,
+    n_slots: int,
+    carry_dtype=jnp.float32,
+    matmul_dtype=jnp.float32,
+    renorm: bool = True,
+):
+    S, R = n_states, n_slots
+    w = w.astype(matmul_dtype)
+
+    def step(lam, l_t):
+        x = jnp.concatenate(
+            [l_t.astype(matmul_dtype), lam.astype(matmul_dtype)], axis=-1
+        )
+        pot = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        pot = pot.reshape(lam.shape[0], S, R)
+        new = jnp.max(pot, axis=-1)
+        phi = jnp.argmax(pot, axis=-1).astype(jnp.int8)
+        if renorm:
+            new = new - jnp.max(new, axis=-1, keepdims=True)
+        return new.astype(carry_dtype), phi
+
+    lam, phis = jax.lax.scan(step, lam0.astype(carry_dtype), blocks)
+    return lam.astype(jnp.float32), phis

@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: fused radix-2^rho Viterbi ACS forward pass.
+
+This is the compute hot-spot the paper optimizes with tensor cores (§V,
+§VIII); here it is re-derived for the TPU MXU (DESIGN.md §2):
+
+  * frames-in-lanes: a tile of BF frames forms the row (batch) dimension of
+    a single MXU matmul per radix step;
+  * the stacked operand  W = [Theta-hat^T ; P]  turns BOTH the super-branch
+    metric computation (Eq. 33) and the predecessor path-metric routing
+    (the paper's dragonfly-group permutation, §VIII-D) into one matmul:
+
+        potentials = [L_t | Lambda] @ W          # MXU, f32 accumulate
+        Lambda'    = max over slots              # VPU
+        phi        = argmax over slots           # VPU (survivors)
+
+  * the t-loop lives INSIDE the kernel (fori_loop), so the path metric
+    carry never round-trips to HBM between stages — the analogue of the
+    paper keeping C resident in the tensor-core accumulator;
+  * survivors may be bit-packed 16-per-int32 (2-bit slots for rho=2) before
+    the HBM store — the analogue of the paper's 32-bit output compaction.
+
+Grid: one program per frame tile.  VMEM per tile (defaults BF=256, k=7,
+rho=2, T<=128 steps): blocks 512KB + potentials 1MB + W 68KB + survivors
+(packed) 512KB — comfortably inside the ~16MB v5e VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["acs_forward_pallas", "DEFAULT_BLOCK_FRAMES"]
+
+DEFAULT_BLOCK_FRAMES = 256
+
+
+def _acs_kernel(
+    blocks_ref,  # (T, BF, B)   LLR blocks (matmul dtype)
+    lam0_ref,  # (BF, S)      initial path metrics f32
+    w_ref,  # (B+S, S*R)   stacked Theta^T / one-hot P (matmul dtype)
+    lam_out_ref,  # (BF, S)      final path metrics f32
+    phi_ref,  # (T, BF, S) int8   OR (T, BF, S//16) int32 when packed
+    *,
+    n_states: int,
+    n_slots: int,
+    carry_dtype,
+    matmul_dtype,
+    renorm: bool,
+    pack_survivors: bool,
+):
+    T = blocks_ref.shape[0]
+    S, R = n_states, n_slots
+    bits = {2: 1, 4: 2, 8: 3, 16: 4}[R]  # slot width in bits
+
+    def step(t, lam):
+        l_t = blocks_ref[t]  # (BF, B)
+        x = jnp.concatenate(
+            [l_t.astype(matmul_dtype), lam.astype(matmul_dtype)], axis=-1
+        )
+        pot = jnp.dot(
+            x, w_ref[...], preferred_element_type=jnp.float32
+        )  # (BF, S*R)
+        pot = pot.reshape(pot.shape[0], S, R)
+        new_lam = jnp.max(pot, axis=-1)
+        phi = jnp.argmax(pot, axis=-1)  # (BF, S) int32 in [0, R)
+        if pack_survivors:
+            grp = phi.reshape(phi.shape[0], S // 16, 16).astype(jnp.int32)
+            shifts = (bits * jax.lax.broadcasted_iota(jnp.int32, (1, 1, 16), 2))
+            packed = jnp.sum(grp << shifts, axis=-1).astype(jnp.int32)
+            phi_ref[t] = packed
+        else:
+            phi_ref[t] = phi.astype(jnp.int8)
+        if renorm:
+            new_lam = new_lam - jnp.max(new_lam, axis=-1, keepdims=True)
+        return new_lam.astype(carry_dtype)
+
+    lam = jax.lax.fori_loop(0, T, step, lam0_ref[...].astype(carry_dtype))
+    lam_out_ref[...] = lam.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_states",
+        "n_slots",
+        "block_frames",
+        "carry_dtype",
+        "matmul_dtype",
+        "renorm",
+        "pack_survivors",
+        "interpret",
+    ),
+)
+def acs_forward_pallas(
+    blocks: jnp.ndarray,  # (T, F, B)
+    lam0: jnp.ndarray,  # (F, S) f32
+    w: jnp.ndarray,  # (B+S, S*R)
+    *,
+    n_states: int,
+    n_slots: int,
+    block_frames: int = DEFAULT_BLOCK_FRAMES,
+    carry_dtype=jnp.float32,
+    matmul_dtype=jnp.float32,
+    renorm: bool = True,
+    pack_survivors: bool = False,
+    interpret: bool = True,
+):
+    """Run the fused forward pass.  Returns (lam_final (F,S) f32, phi).
+
+    phi is (T, F, S) int8 slot indices, or (T, F, S//16) int32 when
+    ``pack_survivors`` (16 slots x 2 bits per word for rho=2).
+    """
+    T, F, B = blocks.shape
+    S, R = n_states, n_slots
+    if pack_survivors and S % 16:
+        raise ValueError("pack_survivors requires n_states % 16 == 0")
+
+    BF = min(block_frames, F)
+    pad = (-F) % BF
+    if pad:
+        blocks = jnp.pad(blocks, ((0, 0), (0, pad), (0, 0)))
+        lam0 = jnp.pad(lam0, ((0, pad), (0, 0)))
+    Fp = F + pad
+    grid = (Fp // BF,)
+
+    phi_shape = (T, BF, S // 16) if pack_survivors else (T, BF, S)
+    phi_dtype = jnp.int32 if pack_survivors else jnp.int8
+
+    kernel = functools.partial(
+        _acs_kernel,
+        n_states=S,
+        n_slots=R,
+        carry_dtype=carry_dtype,
+        matmul_dtype=matmul_dtype,
+        renorm=renorm,
+        pack_survivors=pack_survivors,
+    )
+    lam_out, phi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, BF, B), lambda i: (0, i, 0)),
+            pl.BlockSpec((BF, S), lambda i: (i, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BF, S), lambda i: (i, 0)),
+            pl.BlockSpec(
+                (T, BF, phi_shape[-1]), lambda i: (0, i, 0)
+            ),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Fp, S), jnp.float32),
+            jax.ShapeDtypeStruct((T, Fp, phi_shape[-1]), phi_dtype),
+        ],
+        interpret=interpret,
+    )(blocks.astype(matmul_dtype), lam0, w.astype(matmul_dtype))
+
+    if pad:
+        lam_out = lam_out[:F]
+        phi = phi[:, :F]
+    return lam_out, phi
+
+
+def unpack_survivors(phi_packed: jnp.ndarray, n_states: int, n_slots: int):
+    """(T, F, S//16) int32 -> (T, F, S) int8 slot indices."""
+    bits = {2: 1, 4: 2, 8: 3, 16: 4}[n_slots]
+    T, F, _ = phi_packed.shape
+    shifts = bits * jnp.arange(16, dtype=jnp.int32)
+    un = (phi_packed[..., None] >> shifts) & (n_slots - 1)
+    return un.reshape(T, F, n_states).astype(jnp.int8)

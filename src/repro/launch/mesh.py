@@ -1,0 +1,42 @@
+"""Production mesh definitions (DESIGN.md §5).
+
+Axes:
+  * ``pod``   — inter-pod data parallelism (2 pods in the dry-run target)
+  * ``data``  — intra-pod data/FSDP parallelism
+  * ``model`` — tensor / expert / sequence parallelism
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "dp_axes", "DP_AXES"]
+
+DP_AXES = ("pod", "data")  # batch axes, in order
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if len(jax.devices()) == n:
+        return jax.make_mesh(shape, axes)
+    # host-platform dry-run may expose more devices than one pod needs
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small CPU mesh for unit tests (requires host_device_count >= prod)."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """The batch (data-parallel) axes present in this mesh."""
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)

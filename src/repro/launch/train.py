@@ -1,0 +1,49 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        [--smoke] [--steps 300] [--batch 8] [--seq 256] [--ckpt-dir DIR] \
+        [--microbatches 1]
+
+``--smoke`` trains the reduced config of the family on this host (CPU-
+friendly).  Without it, the full published config is used — on a real
+cluster each host runs this under ``jax.distributed`` with the mesh from
+launch/mesh.py and the sharding rules from distributed/sharding.py (the
+same code paths the dry-run compiles; see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainLoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=100)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    loop = TrainLoopConfig(
+        steps=args.steps,
+        batch=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_interval=args.ckpt_interval,
+        microbatches=args.microbatches,
+    )
+    opt = AdamWConfig(peak_lr=args.lr, total_steps=args.steps)
+    train(cfg, loop, opt)
+
+
+if __name__ == "__main__":
+    main()

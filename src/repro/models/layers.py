@@ -1,0 +1,332 @@
+"""Shared neural-net layers (pure JAX, functional, pytree params).
+
+Everything is written against stacked-per-layer parameters so the
+transformer stack is a single ``jax.lax.scan`` over layers (compile time and
+HLO size independent of depth — required for 64-layer configs on the
+512-device dry-run).
+
+Attention supports:
+  * full causal (train / prefill of short sequences)
+  * chunked causal with online softmax (memory-bounded long prefill);
+    the baseline variant visits every (q-chunk, kv-chunk) pair with masking
+    (2x redundant FLOPs on the upper triangle — measured and then removed in
+    the §Perf hillclimb via the causal-pair schedule),
+  * sliding-window (Mixtral / Hymba),
+  * single-token decode against a KV cache (GQA layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "rope_freqs",
+    "apply_rope",
+    "causal_attention",
+    "chunked_causal_attention",
+    "decode_attention",
+    "swiglu",
+    "dense_init",
+]
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal-ish init; scale defaults to 1/sqrt(fan_in)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    """RMSNorm in f32, cast back to input dtype (LLaMA convention)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rope_freqs(head_dim: int, max_len: int, theta: float = 1e4):
+    """(max_len, head_dim/2) complex rotation angles."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+    t = jnp.arange(max_len)
+    ang = jnp.outer(t, inv)  # (T, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (..., T, H, hd); cos/sin: (T, hd/2) (already offset for decode)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int):
+    """(B, T, KV, hd) -> (B, T, KV*n_rep, hd) for GQA (reference only —
+    the production paths use grouped einsums that never materialize the
+    repeated heads)."""
+    if n_rep == 1:
+        return k
+    b, t, kv, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, kv, n_rep, hd))
+    return k.reshape(b, t, kv * n_rep, hd)
+
+
+def _group_q(q: jnp.ndarray, kv: int):
+    """(B, T, H, hd) -> (B, T, KV, G, hd)."""
+    b, t, h, hd = q.shape
+    return q.reshape(b, t, kv, h // kv, hd)
+
+
+def causal_attention(
+    q: jnp.ndarray,  # (B, T, H, hd)
+    k: jnp.ndarray,  # (B, T, KV, hd)
+    v: jnp.ndarray,
+    sliding_window: int = 0,
+):
+    """Dense causal attention, grouped-query form (k/v never expanded)."""
+    b, t, h, hd = q.shape
+    qg = _group_q(q, k.shape[2])  # (B, T, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    qi = jnp.arange(t)[:, None]
+    ki = jnp.arange(t)[None, :]
+    mask = ki <= qi
+    if sliding_window:
+        mask &= ki > qi - sliding_window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(b, t, h, hd)
+
+
+def chunked_causal_attention(
+    q: jnp.ndarray,  # (B, T, H, hd)
+    k: jnp.ndarray,  # (B, T, KV, hd)
+    v: jnp.ndarray,
+    chunk: int = 512,
+    sliding_window: int = 0,
+    causal_skip: bool = False,
+):
+    """Flash-style chunked attention with online softmax (pure JAX).
+
+    ``causal_skip=False`` (baseline): every (qc, kc) chunk pair is computed
+    and masked — simple, but ~2x the useful attention FLOPs.
+    ``causal_skip=True`` (§Perf optimization): only the T(T+1)/2 causal chunk
+    pairs are visited, laid out as a static 1D scan over (qi, ki) index
+    arrays; for sliding windows, pairs outside the band are dropped too.
+    """
+    b, t, h, hd = q.shape
+    if t % chunk:
+        raise ValueError(f"seq len {t} not divisible by chunk {chunk}")
+    n = t // chunk
+    kv = k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = _group_q(q, kv).reshape(b, n, chunk, kv, g, hd).transpose(
+        1, 0, 2, 3, 4, 5
+    )  # (n, B, chunk, KV, G, hd)
+    kc = k.reshape(b, n, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    pos = jnp.arange(chunk)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def pair_update(carry, qi, ki, q_i, k_j, v_j):
+        """Online-softmax update of (m, l, acc) for query chunk qi.
+
+        Grouped-query einsums (kv heads never expanded); jax.checkpoint =
+        flash-attention-style backward: the (chunk x chunk) score block is
+        recomputed in the backward pass instead of being saved per scan
+        step (which would re-materialize the full S^2 matrix)."""
+        m, l, acc = carry  # (B,chunk,KV,G), same, (B,chunk,KV,G,hd)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q_i, k_j).astype(jnp.float32)
+        s = s * scale
+        qpos = qi * chunk + pos[:, None]
+        kpos = ki * chunk + pos[None, :]
+        mask = kpos <= qpos
+        if sliding_window:
+            mask &= kpos > qpos - sliding_window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        # s: (B, KV, G, chunk_q, chunk_k); m/l tracked as (B,chunk,KV,G)
+        s_max = s.max(axis=-1).transpose(0, 3, 1, 2)
+        m_new = jnp.maximum(m, s_max)
+        p = jnp.exp(s - m_new.transpose(0, 2, 3, 1)[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1).transpose(0, 3, 1, 2)
+        upd = jnp.einsum(
+            "bkgqs,bskd->bqkgd", p.astype(q_i.dtype), v_j
+        ).astype(jnp.float32)
+        acc_new = acc * corr[..., None] + upd
+        return m_new, l_new, acc_new
+
+    def init_carry():
+        m = jnp.full((b, chunk, kv, g), -1e30, jnp.float32)
+        l = jnp.zeros((b, chunk, kv, g), jnp.float32)
+        acc = jnp.zeros((b, chunk, kv, g, hd), jnp.float32)
+        return m, l, acc
+
+    if not causal_skip:
+        # baseline: per q chunk, scan all kv chunks (masked)
+        def per_q(q_i, qi):
+            def body(carry, inputs):
+                k_j, v_j, ki = inputs
+                return pair_update(carry, qi, ki, q_i, k_j, v_j), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                body, init_carry(), (kc, vc, jnp.arange(n))
+            )
+            return acc / l[..., None]
+
+        out = jax.vmap(per_q)(qc, jnp.arange(n))  # (n,B,chunk,KV,G,hd)
+    else:
+        # §Perf: static causal-pair schedule — visit only ki <= qi pairs
+        # (and, for sliding windows, only pairs inside the band).
+        pairs = [
+            (i, j)
+            for i in range(n)
+            for j in range(n)
+            if j <= i
+            and (
+                not sliding_window
+                or (i - j) * chunk < sliding_window + chunk
+            )
+        ]
+        qi_arr = jnp.array([p[0] for p in pairs])
+        ki_arr = jnp.array([p[1] for p in pairs])
+
+        def body(state, pair_idx):
+            m, l, acc, out = state
+            qi = qi_arr[pair_idx]
+            ki = ki_arr[pair_idx]
+            q_i = qc[qi]
+            k_j, v_j = kc[ki], vc[ki]
+            m, l, acc = pair_update((m, l, acc), qi, ki, q_i, k_j, v_j)
+            # when the NEXT pair starts a new q row, flush and reset
+            is_last = (pair_idx == len(pairs) - 1) | (
+                qi_arr[jnp.minimum(pair_idx + 1, len(pairs) - 1)] != qi
+            )
+            out = jax.lax.cond(
+                is_last,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, acc / l[..., None], qi, 0
+                ),
+                lambda o: o,
+                out,
+            )
+            m0, l0, acc0 = init_carry()
+            m = jnp.where(is_last, m0, m)
+            l = jnp.where(is_last, l0, l)
+            acc = jnp.where(is_last, acc0, acc)
+            return (m, l, acc, out), None
+
+        out0 = jnp.zeros((n, b, chunk, kv, g, hd), jnp.float32)
+        (_, _, _, out), _ = jax.lax.scan(
+            body, (*init_carry(), out0), jnp.arange(len(pairs))
+        )
+
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, t, h, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S, KV, hd)
+    v_cache: jnp.ndarray,
+    cache_len,  # scalar or (B,) — number of valid cache entries
+    sliding_window: int = 0,
+):
+    """Single-token attention against a (possibly padded) KV cache,
+    grouped-query form — the cache is never expanded to H heads."""
+    b, s, kv, hd = k_cache.shape
+    h = q.shape[2]
+    qg = _group_q(q, kv)  # (B, 1, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    ki = jnp.arange(s)[None, None, None, None, :]
+    cl = jnp.reshape(cache_len, (-1, 1, 1, 1, 1))
+    valid = ki < cl
+    if sliding_window:
+        valid &= ki >= cl - sliding_window
+    scores = jnp.where(valid, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def decode_attention_deferred(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, Sc, KV, hd) — WITHOUT the current token
+    v_cache: jnp.ndarray,
+    k_self: jnp.ndarray,  # (B, 1, KV, hd) — current token's K
+    v_self: jnp.ndarray,
+    pos,  # scalar global position of the current token
+    sliding_window: int = 0,
+    k_scale=None,  # (B, Sc, KV) f32 — int8 cache dequant scales (§Perf A4)
+    v_scale=None,
+):
+    """Decode attention with the current token as a separate softmax term
+    (§Perf A3): the cache is read-only inside the layer scan, so the
+    stacked cache is written once per step OUTSIDE the loop instead of
+    once per layer.  Ring semantics: slot pos%Sc holds a stale entry when
+    pos >= Sc — masked out (it is the evicted position anyway).
+
+    int8 cache (§Perf A4): scales factor OUT of the dot products — scores
+    pick up k_scale per key; v_scale folds into the probabilities — so
+    the int8 cache is never dequantized into a full bf16 copy."""
+    b, s, kv, hd = k_cache.shape
+    h = q.shape[2]
+    qg = _group_q(q, kv)  # (B, 1, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    kc = k_cache if k_scale is None else k_cache.astype(q.dtype)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc).astype(jnp.float32)
+    if k_scale is None:
+        sc = sc * scale
+    else:
+        sc = sc * (
+            scale * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+        )
+    slot = pos % s
+    ki = jnp.arange(s)[None, None, None, None, :]
+    valid = ki < jnp.minimum(pos, s)
+    valid &= (pos < s) | (ki != slot)  # wrapped slot holds evicted entry
+    if sliding_window:
+        valid &= ki >= pos + 1 - sliding_window
+    sc = jnp.where(valid, sc, -1e30)
+
+    ss = jnp.einsum(
+        "bqkgd,bqkd->bkgq", qg, k_self
+    ).astype(jnp.float32)[..., None] * scale  # (B,KV,G,1,1) self term
+
+    m = jnp.maximum(jnp.max(sc, axis=-1, keepdims=True), ss)
+    pc = jnp.exp(sc - m)
+    ps = jnp.exp(ss - m)
+    denom = jnp.sum(pc, axis=-1, keepdims=True) + ps
+    pcn = pc / denom
+    vc = v_cache
+    if v_scale is not None:  # fold dequant scales into the probabilities
+        pcn = pcn * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+        vc = v_cache.astype(q.dtype)
+    out_c = jnp.einsum("bkgqs,bskd->bqkgd", pcn.astype(q.dtype), vc)
+    w_self = (ps / denom)[..., 0].transpose(0, 3, 1, 2)  # (B,1,KV,G)
+    out_s = w_self[..., None].astype(q.dtype) * v_self[:, :, :, None, :]
+    return (out_c + out_s).reshape(b, 1, h, hd)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("btd,df->btf", x, w_gate))
+    u = jnp.einsum("btd,df->btf", x, w_up)
+    return jnp.einsum("btf,fd->btd", g * u, w_down)

@@ -1,0 +1,665 @@
+"""Unified LM-family model: dense / MoE / SSM (Mamba-2) / hybrid (Hymba).
+
+Design notes (DESIGN.md §3):
+  * stacked-per-layer parameters + ``lax.scan`` over layers: HLO size and
+    compile time are depth-independent (required for 64L x 512-device
+    lowering on one CPU host);
+  * three modes share one layer body: "train" (full seq, no cache),
+    "prefill" (full seq, emits cache), "decode" (one token, ring-buffer
+    cache update).  KV caches are ring buffers (slot = pos mod capacity):
+    sliding-window archs simply get capacity = window, and softmax's
+    permutation invariance over keys (keys carry their RoPE phase) makes
+    rotation bookkeeping unnecessary;
+  * MoE dispatch groups: batch rows for train/prefill, the whole batch for
+    decode (see moe.py);
+  * modality frontends (musicgen EnCodec, internvl ViT) are stubs: callers
+    pass precomputed ``prefix_embeds`` that are concatenated ahead of the
+    token embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import ssd as ssd_lib
+from .layers import (
+    apply_rope,
+    causal_attention,
+    chunked_causal_attention,
+    decode_attention,
+    dense_init,
+    rms_norm,
+    swiglu,
+)
+from .moe import moe_ffn
+
+__all__ = [
+    "init_params",
+    "forward",
+    "init_cache",
+    "cache_specs",
+    "prefill",
+    "decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _has_attn(cfg: ArchConfig) -> bool:
+    return cfg.n_heads > 0
+
+
+def _has_ssm(cfg: ArchConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def _has_mlp(cfg: ArchConfig) -> bool:
+    return cfg.d_ff > 0 and cfg.n_experts == 0
+
+
+def _conv_dim(cfg: ArchConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def _in_proj_dim(cfg: ArchConfig) -> int:
+    return (
+        2 * cfg.d_inner
+        + 2 * cfg.ssm_groups * cfg.ssm_state
+        + cfg.ssm_heads
+    )
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    """Initialize the full parameter pytree (stacked layers)."""
+    pdt = jnp.dtype(cfg.param_dtype)
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    hd, Hq, KV = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    V = cfg.padded_vocab
+    keys = iter(jax.random.split(key, 64))
+
+    def init(shape, scale=None):
+        return dense_init(next(keys), shape, scale, pdt)
+
+    p = {
+        "embed": init((V, D), scale=0.02),
+        "final_norm": jnp.ones((D,), pdt),
+        "lm_head": init((D, V)),
+    }
+    layers = {"norm1": jnp.ones((L, D), pdt)}
+    if _has_attn(cfg):
+        attn = {
+            "wq": init((L, D, Hq * hd)),
+            "wk": init((L, D, KV * hd)),
+            "wv": init((L, D, KV * hd)),
+            "wo": init((L, Hq * hd, D)),
+        }
+        if cfg.qkv_bias:
+            attn["bq"] = jnp.zeros((L, Hq * hd), pdt)
+            attn["bk"] = jnp.zeros((L, KV * hd), pdt)
+            attn["bv"] = jnp.zeros((L, KV * hd), pdt)
+        layers["attn"] = attn
+    if _has_ssm(cfg):
+        di, H = cfg.d_inner, cfg.ssm_heads
+        W, CD = cfg.ssm_conv_width, _conv_dim(cfg)
+        layers["ssm"] = {
+            "in_proj": init((L, D, _in_proj_dim(cfg))),
+            "conv_w": init((L, W, CD), scale=0.5),
+            "conv_b": jnp.zeros((L, CD), pdt),
+            "A_log": jnp.broadcast_to(
+                jnp.log(jnp.linspace(1.0, 16.0, H)), (L, H)
+            ).astype(pdt),
+            "D": jnp.ones((L, H), pdt),
+            "dt_bias": jnp.full((L, H), -2.0, pdt),  # softplus^-1-ish
+            "norm": jnp.ones((L, di), pdt),
+            "out_proj": init((L, di, D)),
+        }
+    if cfg.family == "hybrid":
+        layers["beta_a"] = jnp.ones((L, D), pdt)
+        layers["beta_m"] = jnp.ones((L, D), pdt)
+    if cfg.n_experts:
+        E = cfg.n_experts
+        layers["moe"] = {
+            "router": init((L, D, E), scale=0.02),
+            "w_gate": init((L, E, D, F)),
+            "w_up": init((L, E, D, F)),
+            "w_down": init((L, E, F, D)),
+        }
+        if cfg.moe_dense_residual:
+            layers["res"] = {
+                "w_gate": init((L, D, F)),
+                "w_up": init((L, D, F)),
+                "w_down": init((L, F, D)),
+            }
+    if _has_mlp(cfg):
+        layers["mlp"] = {
+            "w_gate": init((L, D, F)),
+            "w_up": init((L, D, F)),
+            "w_down": init((L, F, D)),
+        }
+    if _has_mlp(cfg) or cfg.n_experts:
+        layers["norm2"] = jnp.ones((L, D), pdt)
+    p["layers"] = layers
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def _kv_capacity(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.sliding_window:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def _kv_quantize(x):
+    """(..., hd) -> int8 values + per-vector f32 scale (§Perf A4)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(
+        jnp.round(xf / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStruct pytree of the decode cache (dry-run input)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    L, hd, KV = cfg.n_layers, cfg.head_dim_, cfg.n_kv_heads
+    c = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if _has_attn(cfg):
+        Sc = _kv_capacity(cfg, max_len)
+        kv_dt = (
+            jnp.int8 if cfg.kv_cache_dtype == "int8" else adt
+        )
+        c["k"] = jax.ShapeDtypeStruct((L, batch, Sc, KV, hd), kv_dt)
+        c["v"] = jax.ShapeDtypeStruct((L, batch, Sc, KV, hd), kv_dt)
+        if cfg.kv_cache_dtype == "int8":  # per-(token, head) scales
+            c["k_scale"] = jax.ShapeDtypeStruct(
+                (L, batch, Sc, KV), jnp.float32
+            )
+            c["v_scale"] = jax.ShapeDtypeStruct(
+                (L, batch, Sc, KV), jnp.float32
+            )
+    if _has_ssm(cfg):
+        H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        c["ssm"] = jax.ShapeDtypeStruct((L, batch, H, P, N), jnp.float32)
+        c["conv"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_conv_width - 1, _conv_dim(cfg)), adt
+        )
+    return c
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, max_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _use(w, cfg: ArchConfig, *spec):
+    """§Perf B2: pin a weight to its TP-only sharding at the use site.
+    The fsdp ("data") storage axis is dropped, so GSPMD all-gathers the
+    SMALL weight instead of partial-summing the LARGE activation."""
+    if not cfg.zero3_gather_at_use:
+        return w
+    from repro.distributed.sharding import constrain
+
+    return constrain(w, *spec)
+
+
+def _attn_block(lp, x, cfg: ArchConfig, rope, mode, kv_cache, pos):
+    """Returns (out (B,T,D), new_kv_cache)."""
+    B, T, D = x.shape
+    hd, Hq, KV = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    cos, sin = rope
+
+    q = jnp.einsum(
+        "btd,dh->bth", x, _use(lp["wq"], cfg, None, "model").astype(x.dtype)
+    )
+    k = jnp.einsum(
+        "btd,dh->bth", x, _use(lp["wk"], cfg, None, "model").astype(x.dtype)
+    )
+    v = jnp.einsum(
+        "btd,dh->bth", x, _use(lp["wv"], cfg, None, "model").astype(x.dtype)
+    )
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(x.dtype)
+        k = k + lp["bk"].astype(x.dtype)
+        v = v + lp["bv"].astype(x.dtype)
+    q = q.reshape(B, T, Hq, hd)
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    int8 = cfg.kv_cache_dtype == "int8"
+    new_cache = kv_cache
+    if mode == "decode" and cfg.decode_deferred_write:
+        from repro.distributed.sharding import kv_cache_constraint
+
+        k_c, v_c = kv_cache[0], kv_cache[1]  # read-only in the scan
+        k_c = kv_cache_constraint(k_c, KV, hd)
+        v_c = kv_cache_constraint(v_c, KV, hd)
+        from .layers import decode_attention_deferred
+
+        out = decode_attention_deferred(
+            q, k_c, v_c, k, v, pos,
+            k_scale=kv_cache[2] if int8 else None,
+            v_scale=kv_cache[3] if int8 else None,
+        )
+        # slot values only; written outside the layer scan (§Perf A3)
+        if int8:
+            kq, ks = _kv_quantize(k)
+            vq, vs = _kv_quantize(v)
+            new_cache = (kq, vq, ks, vs)
+        else:
+            new_cache = (
+                k.astype(kv_cache[0].dtype),
+                v.astype(kv_cache[1].dtype),
+            )
+    elif mode == "decode":
+        if int8:
+            raise NotImplementedError(
+                "int8 KV cache requires decode_deferred_write=True"
+            )
+        from repro.distributed.sharding import kv_cache_constraint
+
+        k_c, v_c = kv_cache  # (B, Sc, KV, hd)
+        Sc = k_c.shape[1]
+        slot = pos % Sc
+        if cfg.decode_ring_write:
+            # §Perf A2: masked ring-write instead of dynamic-update-slice
+            # — elementwise select shards perfectly over a seq-sharded
+            # cache (DUS over a sharded dim = involuntary full remat).
+            sel = (jnp.arange(Sc) == slot)[None, :, None, None]
+            k_c = jnp.where(sel, k.astype(k_c.dtype), k_c)
+            v_c = jnp.where(sel, v.astype(v_c.dtype), v_c)
+        else:
+            k_c = jax.lax.dynamic_update_slice(
+                k_c, k.astype(k_c.dtype), (0, slot, 0, 0)
+            )
+            v_c = jax.lax.dynamic_update_slice(
+                v_c, v.astype(v_c.dtype), (0, slot, 0, 0)
+            )
+        # pin the cache sharding through the attention einsums
+        k_c = kv_cache_constraint(k_c, KV, hd)
+        v_c = kv_cache_constraint(v_c, KV, hd)
+        out = decode_attention(
+            q, k_c, v_c, cache_len=jnp.minimum(pos + 1, Sc)
+        )
+        new_cache = (k_c, v_c)
+    else:
+        if T <= cfg.dense_attn_max:
+            out = causal_attention(q, k, v, cfg.sliding_window)
+        else:
+            out = chunked_causal_attention(
+                q,
+                k,
+                v,
+                chunk=cfg.attn_chunk,
+                sliding_window=cfg.sliding_window,
+                causal_skip=cfg.causal_skip,
+            )
+        if mode == "prefill":
+            Sc = kv_cache[0].shape[1]
+            take = min(T, Sc)
+            k_last, v_last = k[:, -take:], v[:, -take:]
+            if take < Sc:  # right-pad into capacity
+                padw = ((0, 0), (0, Sc - take), (0, 0), (0, 0))
+                k_last = jnp.pad(k_last, padw)
+                v_last = jnp.pad(v_last, padw)
+            else:  # ring alignment: slot = position mod Sc
+                shift = T % Sc
+                k_last = jnp.roll(k_last, shift, axis=1)
+                v_last = jnp.roll(v_last, shift, axis=1)
+            if int8:  # §Perf A4: quantized cache with per-token scales
+                kq, ks = _kv_quantize(k_last)
+                vq, vs = _kv_quantize(v_last)
+                new_cache = (kq, vq, ks, vs)
+            else:
+                new_cache = (k_last.astype(kv_cache[0].dtype),
+                             v_last.astype(kv_cache[1].dtype))
+
+    out = out.reshape(B, T, Hq * hd)
+    return (
+        jnp.einsum(
+            "bth,hd->btd",
+            out,
+            _use(lp["wo"], cfg, "model", None).astype(x.dtype),
+        ),
+        new_cache,
+    )
+
+
+def _ssm_block(lp, x, cfg: ArchConfig, mode, ssm_cache):
+    """Mamba-2 block.  Returns (out (B,T,D), new_ssm_cache)."""
+    B, T, D = x.shape
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N, W = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv_width
+
+    zxbcdt = jnp.einsum(
+        "btd,de->bte",
+        x,
+        _use(lp["in_proj"], cfg, None, "model").astype(x.dtype),
+    )
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)  # (B, T, CD)
+
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))  # (H,)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32)
+    )  # (B, T, H)
+
+    new_cache = ssm_cache
+    if mode == "decode":
+        h, conv_c = ssm_cache  # (B,H,P,N) f32, (B,W-1,CD)
+        win = jnp.concatenate([conv_c, conv_in], axis=1)  # (B, W, CD)
+        conv_out = jnp.einsum(
+            "bwc,wc->bc", win.astype(jnp.float32),
+            lp["conv_w"].astype(jnp.float32),
+        ) + lp["conv_b"].astype(jnp.float32)
+        u = jax.nn.silu(conv_out).astype(x.dtype)  # (B, CD)
+        xs, Bs, Cs = jnp.split(u, [di, di + G * N], axis=-1)
+        h, y = ssd_lib.ssd_decode_step(
+            h,
+            xs.reshape(B, H, P),
+            dt[:, 0],
+            A,
+            Bs.reshape(B, G, N),
+            Cs.reshape(B, G, N),
+            lp["D"].astype(jnp.float32),
+        )
+        y = y.reshape(B, 1, di)
+        new_cache = (h, win[:, 1:].astype(conv_c.dtype))
+    else:
+        u = jax.nn.silu(
+            ssd_lib.causal_conv1d(
+                conv_in, lp["conv_w"].astype(jnp.float32),
+                lp["conv_b"].astype(jnp.float32),
+            )
+        )
+        xs, Bs, Cs = jnp.split(u, [di, di + G * N], axis=-1)
+        y, h_last = ssd_lib.ssd_chunked(
+            xs.reshape(B, T, H, P),
+            dt,
+            A,
+            Bs.reshape(B, T, G, N),
+            Cs.reshape(B, T, G, N),
+            lp["D"].astype(jnp.float32),
+            chunk=min(cfg.ssm_chunk, T),
+            return_state=True,
+        )
+        y = y.reshape(B, T, di)
+        if mode == "prefill":
+            conv_c = ssm_cache[1]
+            tail = conv_in[:, -(W - 1):]
+            if T < W - 1:
+                tail = jnp.concatenate(
+                    [conv_c[:, T:], conv_in], axis=1
+                )
+            new_cache = (h_last, tail.astype(conv_c.dtype))
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)  # gate
+    y = rms_norm(y, lp["norm"], cfg.norm_eps)
+    return (
+        jnp.einsum(
+            "bte,ed->btd",
+            y,
+            _use(lp["out_proj"], cfg, "model", None).astype(x.dtype),
+        ),
+        new_cache,
+    )
+
+
+def _ffn_block(lp, x, cfg: ArchConfig, mode):
+    """MLP / MoE (+ Arctic dense residual).  Returns (out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        # expert weights: EP (E over model) or TP (F over model) at use
+        ep = ("model", None, None)
+        tp = (None, None, "model")
+        tp_dn = (None, "model", None)
+        from jax._src.mesh import thread_resources
+
+        amesh = thread_resources.env.physical_mesh
+        use_ep = (
+            not amesh.empty
+            and "model" in amesh.axis_names
+            and cfg.n_experts % amesh.shape["model"] == 0
+        )
+        w_spec = ep if use_ep else tp
+        d_spec = ep if use_ep else tp_dn
+        mp = {
+            "router": lp["moe"]["router"].astype(x.dtype),
+            "w_gate": _use(lp["moe"]["w_gate"], cfg, *w_spec).astype(x.dtype),
+            "w_up": _use(lp["moe"]["w_up"], cfg, *w_spec).astype(x.dtype),
+            "w_down": _use(lp["moe"]["w_down"], cfg, *d_spec).astype(x.dtype),
+        }
+        if mode == "decode":
+            B = x.shape[0]
+            xg = x.reshape(1, B, x.shape[-1])
+            out, metrics = moe_ffn(
+                xg, mp, cfg.experts_per_token,
+                capacity_factor=max(2.0, cfg.capacity_factor),
+            )
+            out = out.reshape(B, 1, x.shape[-1])
+        else:
+            out, metrics = moe_ffn(
+                x, mp, cfg.experts_per_token, cfg.capacity_factor
+            )
+        aux = metrics.aux_loss + 1e-3 * metrics.z_loss
+        if cfg.moe_dense_residual:
+            rp = lp["res"]
+            out = out + swiglu(
+                x,
+                _use(rp["w_gate"], cfg, None, "model").astype(x.dtype),
+                _use(rp["w_up"], cfg, None, "model").astype(x.dtype),
+                _use(rp["w_down"], cfg, "model", None).astype(x.dtype),
+            )
+        return out, aux
+    mp = lp["mlp"]
+    return (
+        swiglu(
+            x,
+            _use(mp["w_gate"], cfg, None, "model").astype(x.dtype),
+            _use(mp["w_up"], cfg, None, "model").astype(x.dtype),
+            _use(mp["w_down"], cfg, "model", None).astype(x.dtype),
+        ),
+        aux,
+    )
+
+
+def _layer_body(lp, x, cfg: ArchConfig, rope, mode, cache_l, pos):
+    """One transformer layer.  cache_l is a dict of per-layer cache slices."""
+    new_cache = dict(cache_l)
+    u = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+
+    int8 = cfg.kv_cache_dtype == "int8"
+
+    def kv_in():
+        base = (cache_l["k"], cache_l["v"])
+        if int8:
+            base += (cache_l["k_scale"], cache_l["v_scale"])
+        return base
+
+    def kv_out(kv):
+        new_cache["k"], new_cache["v"] = kv[0], kv[1]
+        if int8:
+            new_cache["k_scale"], new_cache["v_scale"] = kv[2], kv[3]
+
+    if cfg.family == "hybrid":
+        a, kv = _attn_block(lp["attn"], u, cfg, rope, mode, kv_in(), pos)
+        s, sc = _ssm_block(
+            lp["ssm"], u, cfg, mode, (cache_l["ssm"], cache_l["conv"])
+        )
+        mix = 0.5 * (
+            a * lp["beta_a"].astype(x.dtype)
+            + s * lp["beta_m"].astype(x.dtype)
+        )
+        x = x + mix
+        kv_out(kv)
+        new_cache["ssm"], new_cache["conv"] = sc
+    elif cfg.family == "ssm":
+        s, sc = _ssm_block(
+            lp["ssm"], u, cfg, mode, (cache_l["ssm"], cache_l["conv"])
+        )
+        x = x + s
+        new_cache["ssm"], new_cache["conv"] = sc
+    else:
+        a, kv = _attn_block(lp["attn"], u, cfg, rope, mode, kv_in(), pos)
+        x = x + a
+        kv_out(kv)
+
+    if _has_mlp(cfg) or cfg.n_experts:
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        f, aux = _ffn_block(lp, h, cfg, mode)
+        x = x + f
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+def _rope_tables(cfg: ArchConfig, positions):
+    inv = 1.0 / (
+        cfg.rope_theta
+        ** (jnp.arange(0, cfg.head_dim_, 2) / cfg.head_dim_)
+    )
+    ang = positions[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _stack(params, cfg, x, rope, mode, cache, pos):
+    """scan over stacked layers; cache arrays have leading dim L."""
+    from repro.distributed.sharding import constrain
+
+    layer_keys = [k for k in cache if k != "pos"]
+
+    def body(carry, scanned):
+        h, aux = carry
+        lp = scanned["lp"]
+        cache_l = {k: scanned[k] for k in layer_keys}
+        h, new_cache, a = _layer_body(lp, h, cfg, rope, mode, cache_l, pos)
+        if mode == "train" and cfg.seq_parallel:
+            # Megatron-SP: the remat-saved inter-layer residual is sharded
+            # over "model" on the sequence dim (8-16x less carry memory);
+            # GSPMD inserts the AG/RS pair at the layer boundary.
+            h = constrain(h, ("pod", "data"), "model", None)
+        return (h, aux + a), new_cache
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    scanned = {"lp": params["layers"]}
+    for k in layer_keys:
+        scanned[k] = cache[k]
+    (x, aux), new_layer_caches = jax.lax.scan(body, (x, 0.0), scanned)
+    new_cache = dict(cache)
+    for k in layer_keys:
+        new_cache[k] = new_layer_caches[k]
+    return x, new_cache, aux
+
+
+def _embed_inputs(params, cfg, tokens, prefix_embeds, adt):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+    if cfg.prefix_len:
+        if prefix_embeds is None:
+            raise ValueError(
+                f"{cfg.name} has a {cfg.frontend} frontend stub: pass "
+                "prefix_embeds (B, prefix_len, d_model)"
+            )
+        h = jnp.concatenate([prefix_embeds.astype(adt), h], axis=1)
+    return h
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+):
+    """Full-sequence forward.  Returns (logits, aux_loss) for train, or
+    (last_logits, cache) for prefill."""
+    from repro.distributed.sharding import constrain
+
+    adt = jnp.dtype(cfg.activation_dtype)
+    h = _embed_inputs(params, cfg, tokens, prefix_embeds, adt)
+    h = constrain(h, ("pod", "data"), None, None)
+    B, S, _ = h.shape
+    rope = _rope_tables(cfg, jnp.arange(S)) if _has_attn(cfg) else None
+
+    if mode == "prefill":
+        assert cache is not None
+    else:
+        cache = {
+            k: jnp.zeros(s.shape, s.dtype)
+            for k, s in cache_specs(cfg, B, 1).items()
+        }  # dummy, dropped
+
+    h, new_cache, aux = _stack(params, cfg, h, rope, mode, cache, pos=0)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+    if mode == "prefill":
+        new_cache["pos"] = jnp.asarray(S, jnp.int32)
+        last = jnp.einsum(
+            "bd,dv->bv", h[:, -1], params["lm_head"].astype(adt)
+        )
+        return last.astype(jnp.float32), new_cache
+
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"].astype(adt))
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits, aux
+
+
+def prefill(params, cfg: ArchConfig, tokens, cache, prefix_embeds=None):
+    return forward(
+        params, cfg, tokens, prefix_embeds, mode="prefill", cache=cache
+    )
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache):
+    """One decoding step.  tokens: (B, 1).  Returns (logits (B,V), cache)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+    pos = cache["pos"]
+    rope = (
+        _rope_tables(cfg, pos[None].astype(jnp.float32))
+        if _has_attn(cfg)
+        else None
+    )
+    h, new_cache, _ = _stack(params, cfg, h, rope, "decode", cache, pos=pos)
+    if _has_attn(cfg) and cfg.decode_deferred_write:
+        # §Perf A3: one masked ring-write of the WHOLE stacked cache per
+        # step — the layer scan only emitted the slot values (L,B,1,KV,hd)
+        Sc = cache["k"].shape[2]
+        slot = pos % Sc
+        sel = (jnp.arange(Sc) == slot)[None, None, :, None, None]
+        keys = ["k", "v"]
+        if cfg.kv_cache_dtype == "int8":
+            keys += ["k_scale", "v_scale"]
+        for key in keys:
+            slot_vals = new_cache[key]  # (L, B, 1, KV[, hd])
+            s = sel if slot_vals.ndim == 5 else sel[..., 0]
+            new_cache[key] = jnp.where(
+                s, slot_vals.astype(cache[key].dtype), cache[key]
+            )
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["lm_head"].astype(adt))
+    new_cache["pos"] = pos + 1
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts FFN (Mixtral 8e top-2; Arctic 128e top-2 + dense
+residual) with static-shape, TPU-friendly capacity dispatch.
+
+Dispatch is per *group* (a group = one batch row for train/prefill, the
+whole batch for decode): tokens are routed top-k, assigned a position
+within their expert's capacity buffer by a cumulative count, scattered to
+an (G, E, C, D) buffer, processed by a batched expert einsum, and scattered
+back weighted by the router probabilities.  Tokens beyond capacity are
+dropped (GShard semantics); capacity_factor controls slack.
+
+Sharding (distributed/sharding.py): experts over the "model" axis (EP) when
+E divides it, otherwise the expert FFN dims over "model" (TP); groups over
+"data".  The scatter/gather pair lowers to an all-to-all on the EP axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MoEMetrics", "router_topk", "moe_ffn"]
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jnp.ndarray  # load-balance loss (Switch Eq. 4)
+    z_loss: jnp.ndarray  # router logit magnitude regularizer
+    drop_frac: jnp.ndarray  # fraction of token-expert pairs dropped
+
+
+def router_topk(x, w_router, top_k: int):
+    """x: (G, T, D) -> (probs (G,T,K) f32, ids (G,T,K) i32, metrics parts)."""
+    logits = jnp.einsum(
+        "gtd,de->gte", x.astype(jnp.float32), w_router.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+    return logits, probs, top_p, top_ids.astype(jnp.int32)
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # (G, T, D) — G groups dispatch independently
+    params: dict,  # router (D,E), w_gate/w_up (E,D,F), w_down (E,F,D)
+    top_k: int,
+    capacity_factor: float = 1.25,
+):
+    """Returns (out (G,T,D), MoEMetrics)."""
+    G, T, D = x.shape
+    E = params["router"].shape[-1]
+    K = top_k
+    C = max(int(math.ceil(T * K / E * capacity_factor)), 1)
+
+    logits, probs, top_p, top_ids = router_topk(x, params["router"], K)
+
+    # position of each (token, k) pair within its expert, per group
+    flat_ids = top_ids.reshape(G, T * K)  # slot-major: token t, slot k
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # (G, TK, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1  # (G, TK, E)
+    pos_in_expert = jnp.take_along_axis(
+        pos, flat_ids[..., None], axis=-1
+    )[..., 0]  # (G, TK)
+    keep = pos_in_expert < C
+    drop_frac = 1.0 - keep.mean()
+
+    # scatter tokens into the capacity buffer (G, E*C, D)
+    dest = jnp.where(keep, flat_ids * C + pos_in_expert, E * C)  # OOB drops
+    tokens = jnp.repeat(x, K, axis=1)  # (G, T*K, D) token t repeated K times
+    buf = jnp.zeros((G, E * C + 1, D), x.dtype)
+    buf = buf.at[
+        jnp.arange(G)[:, None], dest
+    ].set(tokens)[:, : E * C]
+    buf = buf.reshape(G, E, C, D)
+
+    # batched expert SwiGLU
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", g * u, params["w_down"])
+    y = y.reshape(G, E * C, D)
+
+    # gather back, weighted by (renormalized) router probs
+    y = jnp.concatenate([y, jnp.zeros((G, 1, D), y.dtype)], axis=1)
+    back = jnp.take_along_axis(y, dest[..., None], axis=1)  # (G, TK, D)
+    w = (top_p.reshape(G, T * K) * keep).astype(x.dtype)
+    out = (back * w[..., None]).reshape(G, T, K, D).sum(axis=2)
+
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    f_e = jnp.mean(
+        jax.nn.one_hot(top_ids, E, dtype=jnp.float32), axis=(1, 2)
+    ).mean(0)
+    p_e = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, MoEMetrics(aux, z, drop_frac)

@@ -1,0 +1,162 @@
+"""Mamba-2 SSD (state-space duality) layer [arXiv:2405.21060] — chunked.
+
+The chunked algorithm is the same structural move as the paper's radix-4
+reformulation (DESIGN.md §4): a sequential recurrence is blocked so that
+within-block work becomes dense matmuls (MXU) and only a short cross-block
+scan stays sequential.
+
+   y = SSD(x) :  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t
+
+Shapes: x (B, L, H, P); dt (B, L, H); A (H,) < 0; B, C (B, L, G, N);
+heads H are grouped over G B/C groups (GVA, like GQA for attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "ssd_reference", "causal_conv1d"]
+
+
+def _expand_groups(bc, H):
+    """(B, L, G, N) -> (B, L, H, N) by repeating each group H/G times."""
+    B, L, G, N = bc.shape
+    rep = H // G
+    if rep == 1:
+        return bc
+    out = jnp.broadcast_to(bc[:, :, :, None, :], (B, L, G, rep, N))
+    return out.reshape(B, L, H, N)
+
+
+def ssd_reference(x, dt, A, B, C, D=None):
+    """Naive per-step recurrence (oracle for tests).  O(L) sequential."""
+    Bm, L, H, P = x.shape
+    N = B.shape[-1]
+    Bh = _expand_groups(B, H).astype(jnp.float32)
+    Ch = _expand_groups(C, H).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dt_t * A)[..., None, None]  # (B,H,1,1)
+        h = h * decay + (dt_t[..., None, None]
+                         * B_t[:, :, None, :] * x_t[..., None])
+        y = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((Bm, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            xf.transpose(1, 0, 2, 3),
+            dtf.transpose(1, 0, 2),
+            Bh.transpose(1, 0, 2, 3),
+            Ch.transpose(1, 0, 2, 3),
+        ),
+    )
+    y = ys.transpose(1, 0, 2, 3)  # (B, L, H, P)
+    if D is not None:
+        y = y + D[None, None, :, None].astype(jnp.float32) * xf
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, D=None, chunk: int = 128, return_state=False):
+    """Chunked SSD: intra-chunk dense matmuls + inter-chunk state scan.
+
+    With ``return_state`` also returns the final recurrent state
+    (B, H, P, N) — the decode-cache layout of ``ssd_decode_step``."""
+    Bm, L, H, P = x.shape
+    if L % chunk:
+        raise ValueError(f"L={L} not divisible by chunk={chunk}")
+    nc = L // chunk
+    Q = chunk
+    N = B.shape[-1]
+    Bh = _expand_groups(B, H).astype(jnp.float32)
+    Ch = _expand_groups(C, H).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    # chunked views: (B, nc, Q, ...)
+    xc = xf.reshape(Bm, nc, Q, H, P)
+    dtc = dtf.reshape(Bm, nc, Q, H)
+    Bc = Bh.reshape(Bm, nc, Q, H, N)
+    Cc = Ch.reshape(Bm, nc, Q, H, N)
+
+    dA = dtc * A  # (B, nc, Q, H), <= 0
+    A_cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    A_tot = A_cs[:, :, -1]  # (B, nc, H)
+
+    # ---- intra-chunk (dense, MXU-friendly) ----
+    # Lmat[q, k] = exp(A_cs[q] - A_cs[k]) for k <= q (segment decay).
+    # double-where: the masked upper triangle has diff > 0 whose exp can
+    # overflow — zero it BEFORE exp so the where-gradient stays finite.
+    diff = A_cs[:, :, :, None, :] - A_cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    diff = jnp.where(tri, diff, 0.0)
+    Lmat = jnp.where(tri, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc) * Lmat
+    xdt = xc * dtc[..., None]  # dt-weighted inputs
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xdt)
+
+    # ---- chunk summary states ----
+    # S_c = sum_k exp(A_tot - A_cs[k]) B_k (x_k dt_k)^T   (B,nc,H,N,P)
+    decay_out = jnp.exp(A_tot[:, :, None, :] - A_cs)  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", Bc, decay_out, xdt)
+
+    # ---- inter-chunk recurrence (short scan over nc) ----
+    def step(h, inp):
+        S_ci, A_ti = inp  # (B,H,N,P), (B,H)
+        h_next = h * jnp.exp(A_ti)[:, :, None, None] + S_ci
+        return h_next, h  # emit state BEFORE this chunk
+
+    h0 = jnp.zeros((Bm, H, N, P), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (S_c.transpose(1, 0, 2, 3, 4), A_tot.transpose(1, 0, 2))
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (B, nc, H, N, P)
+
+    # ---- inter-chunk contribution ----
+    y_off = jnp.einsum(
+        "bcqhn,bchnp,bcqh->bcqhp", Cc, h_prev, jnp.exp(A_cs)
+    )
+
+    y = (y_intra + y_off).reshape(Bm, L, H, P)
+    if D is not None:
+        y = y + D[None, None, :, None].astype(jnp.float32) * xf
+    y = y.astype(x.dtype)
+    if return_state:
+        # ssd_decode_step keeps the state as (B, H, P, N)
+        return y, h_last.transpose(0, 1, 3, 2)
+    return y
+
+
+def ssd_decode_step(h, x_t, dt_t, A, B_t, C_t, D=None):
+    """One-token SSD update.  h: (B, H, P, N) f32 state.
+
+    Returns (h_next, y_t (B, H, P)).
+    """
+    H = x_t.shape[1]
+    B_t = _expand_groups(B_t[:, None], H)[:, 0].astype(jnp.float32)
+    C_t = _expand_groups(C_t[:, None], H)[:, 0].astype(jnp.float32)
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)[..., None, None]
+    h = h * decay + dtf[..., None, None] * xf[..., None] * B_t[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+    if D is not None:
+        y = y + D[None, :, None] * xf
+    return h, y.astype(x_t.dtype)
+
+
+def causal_conv1d(u, w, bias=None):
+    """Depthwise causal conv.  u: (B, L, Ch), w: (W, Ch).  Returns (B,L,Ch)."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(W):  # W is small (4); unrolled taps
+        out = out + pad[:, i : i + u.shape[1]].astype(jnp.float32) * w[i]
+    if bias is not None:
+        out = out + bias
+    return out.astype(u.dtype)

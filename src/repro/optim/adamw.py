@@ -1,0 +1,108 @@
+"""AdamW with global-norm clipping and schedules (pure JAX, no optax).
+
+State is a pytree mirroring the params (m, v) plus a step counter, so the
+distributed layer shards optimizer state with the same PartitionSpecs as the
+parameters (ZeRO-style, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm"]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+        t = (step - cfg.warmup_steps) / max(
+            cfg.total_steps - cfg.warmup_steps, 1
+        )
+        t = jnp.clip(t, 0.0, 1.0)
+        floor = cfg.min_lr_ratio * cfg.peak_lr
+        cos = floor + 0.5 * (cfg.peak_lr - floor) * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    cfg: AdamWConfig,
+    lr_fn: Optional[Callable] = None,
+):
+    """Returns (new_params, new_state, stats)."""
+    lr_fn = lr_fn or cosine_schedule(cfg)
+    step = state.step + 1
+    lr = lr_fn(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        newp = (
+            p.astype(jnp.float32)
+            - lr * (delta + cfg.weight_decay * p.astype(jnp.float32))
+        )
+        return newp.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    stats = {"lr": lr, "grad_norm": gnorm, "clip_scale": scale}
+    return new_p, OptState(step=step, m=new_m, v=new_v), stats

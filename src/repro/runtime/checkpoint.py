@@ -1,0 +1,142 @@
+"""Checkpointing: sharded-npz save/restore with manifest + async writer.
+
+Layout:
+    <dir>/step_000123/
+        manifest.json        # step, tree structure, shapes/dtypes, status
+        arrays.npz           # flat leaves keyed by tree path
+The manifest is written LAST with status="complete" — a torn checkpoint
+(host died mid-write) is detected and skipped by ``latest_step``.
+
+``save_async`` runs the serialization on a writer thread so the train loop
+only blocks on the device->host copy, not the disk write (the standard
+async-checkpoint overlap).  Restore resharding: arrays are loaded on host
+and ``jax.device_put`` with the CURRENT mesh's shardings — a checkpoint
+written on one mesh restores onto any other (elastic re-mesh path).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save(ckpt_dir, step: int, tree, extra: Optional[dict] = None) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    out = ckpt_dir / f"step_{step:09d}"
+    out.mkdir(parents=True, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    np.savez(out / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+        "time": time.time(),
+        "status": "complete",  # written last: torn writes lack this file
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return out
+
+
+def save_async(ckpt_dir, step: int, tree, extra=None) -> threading.Thread:
+    """Device->host copy now; disk write on a background thread."""
+    host_tree = jax.tree.map(np.asarray, tree)  # blocks on D2H only
+    t = threading.Thread(
+        target=save, args=(ckpt_dir, step, host_tree, extra), daemon=True
+    )
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for d in ckpt_dir.glob("step_*"):
+        m = d / "manifest.json"
+        if m.exists():
+            try:
+                if json.loads(m.read_text()).get("status") == "complete":
+                    steps.append(int(d.name.split("_")[1]))
+            except (ValueError, json.JSONDecodeError):
+                continue
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, step: int, tree_like, shardings=None):
+    """Restore into the structure of ``tree_like``; reshard onto
+    ``shardings`` (a matching pytree of NamedSharding) when given."""
+    out = pathlib.Path(ckpt_dir) / f"step_{step:09d}"
+    data = np.load(out / "arrays.npz")
+    flat_paths = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, like in flat_paths[0]:
+        key = jax.tree_util.keystr(path)
+        arr = data[key]
+        if shardings is not None:
+            sh = _lookup(shardings, path)
+            arr = jax.device_put(arr, sh)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat_paths[1], leaves)
+
+
+def _lookup(tree, path):
+    node = tree
+    for p in path:
+        key = getattr(p, "key", getattr(p, "idx", getattr(p, "name", None)))
+        node = node[key]
+    return node
+
+
+class CheckpointManager:
+    """Keeps the last N checkpoints, saves every ``interval`` steps."""
+
+    def __init__(self, ckpt_dir, interval: int = 100, keep: int = 3):
+        self.dir = pathlib.Path(ckpt_dir)
+        self.interval = interval
+        self.keep = keep
+        self._pending: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree, extra=None) -> bool:
+        if step % self.interval:
+            return False
+        if self._pending is not None:
+            self._pending.join()  # one in flight at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # block on D2H only
+
+        def write():
+            save(self.dir, step, host_tree, extra)
+            self._gc()  # in-thread: runs after the new step exists
+
+        self._pending = threading.Thread(target=write, daemon=True)
+        self._pending.start()
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(
+            int(d.name.split("_")[1]) for d in self.dir.glob("step_*")
+        )
+        for s in steps[: -self.keep]:
+            d = self.dir / f"step_{s:09d}"
+            for f in d.iterdir():
+                f.unlink()
+            d.rmdir()

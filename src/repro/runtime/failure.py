@@ -1,0 +1,115 @@
+"""Fault tolerance at 1000+ node scale: heartbeat failure detection,
+elastic re-mesh planning, straggler mitigation.
+
+These components are hardware-agnostic control-plane logic (pure Python,
+unit-tested here, driven by the runner on a real cluster):
+
+  * ``HeartbeatMonitor`` — each host posts (host_id, time); hosts silent
+    for > timeout are declared failed.
+  * ``ElasticPlanner`` — given surviving hosts, pick the largest valid
+    (data, model) mesh <= survivors (model axis preserved when possible so
+    TP-sharded weights reshard trivially), and emit a reshard plan; the
+    train loop restores the latest checkpoint onto the new mesh
+    (runtime/checkpoint.py restore() reshards by construction).
+  * ``StragglerMonitor`` — per-host step times; a host persistently slower
+    than k x median is flagged for eviction (which then flows through the
+    elastic path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+__all__ = ["HeartbeatMonitor", "ElasticPlanner", "MeshPlan", "StragglerMonitor"]
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: Sequence[int], timeout: float = 30.0):
+        self.timeout = timeout
+        self.last_seen: Dict[int, float] = {h: 0.0 for h in hosts}
+
+    def beat(self, host: int, now: float):
+        self.last_seen[host] = now
+
+    def failed(self, now: float) -> List[int]:
+        return sorted(
+            h for h, t in self.last_seen.items() if now - t > self.timeout
+        )
+
+    def alive(self, now: float) -> List[int]:
+        return sorted(
+            h for h, t in self.last_seen.items() if now - t <= self.timeout
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+    hosts: tuple  # host ids in mesh order
+    dropped: tuple  # healthy hosts left out (not a power-of-two fit)
+
+    @property
+    def size(self) -> int:
+        return self.data * self.model
+
+
+class ElasticPlanner:
+    """Re-plan the (data, model) mesh after failures.
+
+    Keeps the model axis if possible (so TP shards stay host-local and the
+    reshard is a pure data-axis regroup), shrinking the data axis to the
+    largest size that divides the survivor count; otherwise falls back to
+    the largest power-of-two mesh.
+    """
+
+    def __init__(self, model_axis: int):
+        self.model_axis = model_axis
+
+    def plan(self, alive_hosts: Sequence[int]) -> Optional[MeshPlan]:
+        alive = sorted(alive_hosts)
+        n = len(alive)
+        if n == 0:
+            return None
+        m = self.model_axis
+        while m > 1 and n < m:
+            m //= 2
+        data = n // m
+        if data >= 1:
+            # keep batch-math friendly: round data axis down to a power of 2
+            data = 2 ** int(math.log2(data))
+            used = alive[: data * m]
+            return MeshPlan(
+                data=data,
+                model=m,
+                hosts=tuple(used),
+                dropped=tuple(alive[data * m :]),
+            )
+        return None
+
+
+class StragglerMonitor:
+    """Flags hosts persistently slower than ``k`` x median step time."""
+
+    def __init__(self, k: float = 1.5, patience: int = 3, window: int = 20):
+        self.k = k
+        self.patience = patience
+        self.window = window
+        self.times: Dict[int, List[float]] = {}
+        self.strikes: Dict[int, int] = {}
+
+    def record_step(self, step_times: Dict[int, float]):
+        med = sorted(step_times.values())[len(step_times) // 2]
+        for h, t in step_times.items():
+            self.times.setdefault(h, []).append(t)
+            self.times[h] = self.times[h][-self.window :]
+            if t > self.k * med:
+                self.strikes[h] = self.strikes.get(h, 0) + 1
+            else:
+                self.strikes[h] = 0
+
+    def stragglers(self) -> List[int]:
+        return sorted(
+            h for h, s in self.strikes.items() if s >= self.patience
+        )

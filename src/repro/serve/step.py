@@ -1,0 +1,59 @@
+"""Serving step factories: LM prefill / decode, and the paper's Viterbi
+stream-decode service."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+__all__ = [
+    "make_prefill_step",
+    "make_decode_step",
+    "make_viterbi_serve_step",
+]
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, cache, batch):
+        return lm.prefill(
+            params, cfg, batch["tokens"], cache, batch.get("prefix_embeds")
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, tokens):
+        return lm.decode_step(params, cfg, tokens, cache)
+
+    return decode_step
+
+
+def make_viterbi_serve_step(vcfg, precision=None, use_kernel: bool = False):
+    """Batched tiled Viterbi decode (the paper's serving workload).
+
+    llrs: (n_streams, stream_len, beta) -> bits (n_streams, stream_len).
+    Frame tiling turns each stream into stream_len/frame_len independent
+    windows; vmap adds the stream batch — all of it pure data parallelism
+    (the paper's §III parallelization), sharded over every mesh axis.
+    """
+    from repro.core.viterbi import tiled_decode_stream
+
+    precision = precision or vcfg.precision
+
+    def serve_step(llrs):
+        fn = functools.partial(
+            tiled_decode_stream,
+            spec=vcfg.spec,
+            cfg=vcfg.tiled,
+            precision=precision,
+            use_kernel=use_kernel,
+            pack_survivors=getattr(vcfg, "pack_survivors", False),
+        )
+        return jax.vmap(fn)(llrs)
+
+    return serve_step

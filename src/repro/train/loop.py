@@ -1,0 +1,93 @@
+"""Training loop: steps + checkpointing + failure/straggler hooks.
+
+This is the single-process core used by examples/train_lm.py; on a real
+cluster each host runs it under ``jax.distributed`` with the same code
+(the data pipeline and checkpoint manager are host-aware by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import TokenStream
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.checkpoint import CheckpointManager, latest_step, restore
+from repro.runtime.failure import StragglerMonitor
+from repro.train.step import init_train_state, make_train_step
+
+__all__ = ["TrainLoopConfig", "train"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 200
+    batch: int = 8
+    seq_len: int = 256
+    ckpt_dir: Optional[str] = None
+    ckpt_interval: int = 50
+    log_interval: int = 10
+    seed: int = 0
+    microbatches: int = 1
+
+
+def train(
+    cfg: ArchConfig,
+    loop: TrainLoopConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+    log_fn: Callable = print,
+):
+    """Train on the synthetic stream; resumes from the latest checkpoint."""
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=loop.steps)
+    key = jax.random.PRNGKey(loop.seed)
+    params, opt_state = init_train_state(cfg, key)
+    start = 0
+
+    mgr = None
+    if loop.ckpt_dir:
+        mgr = CheckpointManager(loop.ckpt_dir, interval=loop.ckpt_interval)
+        last = latest_step(loop.ckpt_dir)
+        if last is not None:
+            state = restore(
+                loop.ckpt_dir, last, {"params": params, "opt": opt_state}
+            )
+            params, opt_state = state["params"], state["opt"]
+            start = last + 1  # checkpoint holds post-step-`last` state
+            log_fn(f"[train] resumed from checkpoint step {last}")
+
+    stream = TokenStream(
+        vocab_size=cfg.vocab_size,
+        batch=loop.batch,
+        seq_len=loop.seq_len + cfg.prefix_len * 0,
+        seed=loop.seed,
+        prefix_len=cfg.prefix_len,
+        d_model=cfg.d_model,
+    )
+    step_fn = jax.jit(
+        make_train_step(cfg, opt_cfg, microbatches=loop.microbatches),
+        donate_argnums=(0, 1),
+    )
+    straggler = StragglerMonitor()
+    history = []
+    for step in range(start, loop.steps):
+        t0 = time.time()
+        batch = stream.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % loop.log_interval == 0 or step == loop.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            history.append((step, loss))
+            log_fn(
+                f"[train] step {step:>5d} loss {loss:.4f} "
+                f"lr {float(metrics['lr']):.2e} "
+                f"gnorm {float(metrics['grad_norm']):.2f} ({dt:.2f}s)"
+            )
+        straggler.record_step({0: time.time() - t0})
+        if mgr is not None:
+            mgr.maybe_save(step, {"params": params, "opt": opt_state})
+    if mgr is not None:
+        mgr.wait()
+    return params, opt_state, history

@@ -1,0 +1,193 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward /
+train-grad / prefill+decode consistency per family.  Full configs are only
+exercised via the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import lm
+
+SMOKES = {a: get_smoke_config(a) for a in ARCH_IDS}
+
+
+def _demo_inputs(cfg, key, B=2, S=64):
+    kt, kp = jax.random.split(key)
+    S_tok = S - cfg.prefix_len
+    tokens = jax.random.randint(kt, (B, S_tok), 0, cfg.vocab_size)
+    prefix = None
+    if cfg.prefix_len:
+        prefix = (
+            0.02
+            * jax.random.normal(kp, (B, cfg.prefix_len, cfg.d_model))
+        ).astype(jnp.bfloat16)
+    return tokens, prefix
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact_numbers(arch):
+    """The published numbers survive into the full config."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+    }[arch]
+    got = (
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.d_ff,
+        cfg.vocab_size,
+    )
+    assert got == expected
+    if arch == "arctic-480b":
+        assert (cfg.n_experts, cfg.experts_per_token) == (128, 2)
+        assert cfg.moe_dense_residual
+    if arch == "mixtral-8x7b":
+        assert (cfg.n_experts, cfg.experts_per_token) == (8, 2)
+        assert cfg.sliding_window > 0
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16 and cfg.family == "hybrid"
+    if arch == "mamba2-370m":
+        assert cfg.ssm_state == 128 and cfg.family == "ssm"
+
+
+def test_param_count_sanity():
+    """Analytic parameter counts land in the advertised ballpark."""
+    assert 30e9 < get_config("qwen1.5-32b").n_params() < 36e9
+    assert 8e9 < get_config("glm4-9b").n_params() < 11e9
+    assert 120e6 < get_config("smollm-135m").n_params() < 165e6
+    assert 400e9 < get_config("arctic-480b").n_params() < 530e9
+    assert 42e9 < get_config("mixtral-8x7b").n_params() < 50e9
+    assert 330e6 < get_config("mamba2-370m").n_params() < 480e6
+    # MoE active params well below total
+    arc = get_config("arctic-480b")
+    assert arc.n_active_params() < 0.2 * arc.n_params()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nans(arch):
+    cfg = SMOKES[arch]
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    tokens, prefix = _demo_inputs(cfg, key)
+    logits, aux = lm.forward(params, cfg, tokens, prefix, mode="train")
+    B, S_tok = tokens.shape
+    assert logits.shape == (B, S_tok + cfg.prefix_len, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced decode logits == full-forward logits (cache wiring).
+
+    f32 activations so the comparison is tight — bf16 differs by op-order
+    noise between the train and decode paths."""
+    import dataclasses
+
+    cfg = dataclasses.replace(SMOKES[arch], activation_dtype="float32")
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key)
+    B, S = 2, 32
+    tokens, prefix = _demo_inputs(cfg, key, B, S)
+    S_tok = tokens.shape[1]
+
+    full_logits, _ = lm.forward(params, cfg, tokens, prefix, mode="train")
+    full_logits = full_logits.astype(jnp.float32)
+
+    cache = lm.init_cache(cfg, B, max_len=S + 8)
+    n_dec = 4
+    last, cache = lm.prefill(
+        params, cfg, tokens[:, : S_tok - n_dec], cache, prefix
+    )
+    np.testing.assert_allclose(
+        np.array(last),
+        np.array(full_logits[:, -n_dec - 1]),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+    for i in range(n_dec):
+        t = tokens[:, S_tok - n_dec + i : S_tok - n_dec + i + 1]
+        logits, cache = lm.decode_step(params, cfg, t, cache)
+        want = full_logits[:, S_tok + cfg.prefix_len - n_dec + i]
+        np.testing.assert_allclose(
+            np.array(logits), np.array(want), rtol=1e-3, atol=1e-3
+        )
+
+
+@pytest.mark.parametrize(
+    "arch", ["glm4-9b", "arctic-480b", "hymba-1.5b", "mamba2-370m"]
+)
+def test_train_grad_step(arch):
+    """One loss+grad evaluation is finite and nonzero for each family."""
+    cfg = SMOKES[arch]
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(cfg, key)
+    tokens, prefix = _demo_inputs(cfg, key, B=2, S=32)
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = lm.forward(p, cfg, tokens, prefix, mode="train")
+        logits = logits[:, cfg.prefix_len :].astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)
+        return nll.mean() + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)) and loss > 0
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    gnorm = sum(float((g.astype(jnp.float32) ** 2).sum()) for g in flat)
+    assert gnorm > 0
+
+
+def test_swa_cache_capacity():
+    """Mixtral's decode cache is bounded by the window, not the seq len."""
+    cfg = get_config("mixtral-8x7b")
+    specs = lm.cache_specs(cfg, batch=1, max_len=524288)
+    assert specs["k"].shape[2] == cfg.sliding_window
+
+
+def test_long_500k_applicability():
+    from repro.configs import SHAPE_CELLS, cell_applicable
+
+    cell = SHAPE_CELLS["long_500k"]
+    eligible = {a for a in ARCH_IDS if cell_applicable(get_config(a), cell)}
+    assert eligible == {"mamba2-370m", "hymba-1.5b", "mixtral-8x7b"}
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "qwen1.5-32b"])
+def test_int8_kv_cache_decode_close(arch):
+    """§Perf A4: int8 KV cache decode tracks the f32 path (quantization
+    error well below logit scale)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        SMOKES[arch], activation_dtype="float32", kv_cache_dtype="int8"
+    )
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _ = lm.forward(params, cfg, tokens, mode="train")
+    cache = lm.init_cache(cfg, B, max_len=40)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    last, cache = lm.prefill(params, cfg, tokens[:, : S - 3], cache)
+    errs = [float(jnp.abs(last - full[:, S - 4]).max())]
+    for i in range(3):
+        lg, cache = lm.decode_step(
+            params, cfg, tokens[:, S - 3 + i : S - 2 + i], cache
+        )
+        errs.append(float(jnp.abs(lg - full[:, S - 3 + i]).max()))
+    assert max(errs) < 0.15, errs

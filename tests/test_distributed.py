@@ -1,0 +1,223 @@
+"""Distribution tests: sharding specs, hlocount cost model, and sharded
+execution matching single-device numerics (subprocess: device count must
+be set before jax init)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.hlocount import analyze_hlo
+from repro.roofline import CollectiveOp, parse_collectives
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+        timeout=520,
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    return r.stdout
+
+
+SYN_HLO = """
+HloModule m
+ENTRY %main (a: f32[64,128]) -> f32[64,128] {
+  %a = f32[64,128]{1,0} parameter(0)
+  %ar = f32[64,128]{1,0} all-reduce(%a), replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = bf16[64,256]{1,0} all-gather(%a), replica_groups=[1,8]<=[8], dimensions={1}
+  ROOT %out = f32[64,128]{1,0} add(%ar, %ar)
+}
+"""
+
+
+def test_collective_parser_synthetic():
+    ops = parse_collectives(SYN_HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce"]
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.group_size == 4
+    assert ar.result_bytes == 64 * 128 * 4
+    assert ar.wire_bytes == pytest.approx(2 * 3 / 4 * 64 * 128 * 4)
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.result_bytes == 64 * 256 * 2
+    assert ag.wire_bytes == pytest.approx(7 / 8 * 64 * 256 * 2)
+
+
+def test_hlocount_scan_multiplication():
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+import jax, jax.numpy as jnp
+from repro.hlocount import analyze_hlo
+def f(x, w):
+    def body(c, _):
+        return jnp.tanh(c @ w), None
+    y, _ = jax.lax.scan(body, x, None, length=13)
+    return y.sum()
+c = jax.jit(f).lower(jax.ShapeDtypeStruct((8,64), jnp.float32),
+                     jax.ShapeDtypeStruct((64,64), jnp.float32)).compile()
+r = analyze_hlo(c.as_text())
+expected = 2*8*64*64*13
+assert abs(r.dot_flops - expected) < 1, (r.dot_flops, expected)
+assert not r.unknown_ops, r.unknown_ops
+print("OK", r.dot_flops)
+"""
+    )
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """One smoke train step on a 2x2 mesh == unsharded step (numerics)."""
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_test_mesh
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+from repro.configs.base import ShapeCell
+
+cfg = dataclasses.replace(get_smoke_config("glm4-9b"),
+                          activation_dtype="float32")
+key = jax.random.PRNGKey(0)
+params = lm.init_params(cfg, key)
+opt = adamw_init(params)
+tokens = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+labels = jnp.roll(tokens, -1, axis=1)
+batch = {"tokens": tokens, "labels": labels}
+step = make_train_step(cfg, AdamWConfig())
+
+p_ref, _, m_ref = jax.jit(step)(params, opt, batch)
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+cell = ShapeCell("t", 32, 4, "train")
+with mesh:
+    p_sh, o_sh = shd.train_state_shardings(
+        cfg, mesh, jax.eval_shape(lambda: params), jax.eval_shape(lambda: opt))
+    b_sh = shd.named(mesh, shd.batch_specs(cfg, mesh, cell))
+    jstep = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                    out_shardings=(p_sh, o_sh, None))
+    p_out, _, m_out = jstep(params, opt, batch)
+
+assert abs(float(m_ref["loss"]) - float(m_out["loss"])) < 1e-4, (
+    float(m_ref["loss"]), float(m_out["loss"]))
+for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_out)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-5)
+print("OK", float(m_out["loss"]))
+"""
+    )
+    assert "OK" in out
+
+
+def test_sharded_viterbi_serve_matches_reference():
+    """Viterbi serve step sharded over a 4-device mesh == unsharded."""
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.viterbi_k7 import smoke_config
+from repro.data.pipeline import ChannelStream
+from repro.launch.mesh import make_test_mesh
+from repro.serve.step import make_viterbi_serve_step
+
+vcfg = smoke_config()
+stream = ChannelStream(n_streams=4, stream_len=vcfg.stream_len, ebn0_db=5.0)
+bits, llrs = stream.batch_at(0)
+step = make_viterbi_serve_step(vcfg)
+ref = jax.jit(step)(llrs)
+mesh = make_test_mesh((2, 2), ("data", "model"))
+with mesh:
+    sh = NamedSharding(mesh, P(("data", "model"), None, None))
+    got = jax.jit(step, in_shardings=(sh,))(llrs)
+np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+ber = float((np.asarray(got) != np.asarray(bits)).mean())
+assert ber < 0.01, ber
+print("OK ber", ber)
+"""
+    )
+    assert "OK" in out
+
+
+def test_param_spec_coverage():
+    """Every param leaf gets a spec; TP dims divisible on the 16-mesh."""
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import param_specs, _fix_divisibility
+from repro.launch.mesh import make_test_mesh
+from repro.models import lm
+mesh = make_test_mesh((4, 4), ("data", "model"))
+for arch in ARCH_IDS:
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda c=cfg: lm.init_params(c, jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, mesh, shapes)
+    specs = _fix_divisibility(specs, shapes, mesh)
+    for (path, spec), (_, shape) in zip(
+        jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval"))[0],
+        jax.tree_util.tree_flatten_with_path(shapes)[0],
+    ):
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            assert shape.shape[i] % size == 0, (arch, path, spec, shape.shape)
+print("OK")
+"""
+    )
+    assert "OK" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    """GPipe pipeline over 4 stages == sequential layer stack, exactly."""
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.pipeline import pipeline_apply, bubble_fraction
+mesh = jax.make_mesh((4,), ("pipe",))
+rng = np.random.default_rng(0)
+n_stages, d = 4, 16
+Ws = jnp.asarray(rng.normal(0, 0.5, (n_stages, d, d)), jnp.float32)
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+x = jnp.asarray(rng.normal(0, 1, (8, d)), jnp.float32)
+want = x
+for i in range(n_stages):
+    want = stage_fn(Ws[i], want)
+with mesh:
+    apply = pipeline_apply(stage_fn, mesh, n_microbatches=4)
+    got = jax.jit(apply)(Ws, x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+assert abs(bubble_fraction(4, 4) - 3/7) < 1e-9
+print("OK")
+"""
+    )
+    assert "OK" in out

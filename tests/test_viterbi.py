@@ -1,0 +1,254 @@
+"""Decoder behaviour: matrix form vs Algorithm 1/2 oracle, radix
+equivalence, tiled stream decoding, BER sanity (paper §IX-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CODE_K7_CCSDS,
+    AcsPrecision,
+    CodeSpec,
+    TiledDecoderConfig,
+    decode_frames,
+    tiled_decode_stream,
+)
+from repro.core import channel as ch
+from repro.core.ber import measure_ber, uncoded_ber_theory
+from repro.core.encoder import conv_encode, conv_encode_jax, tail_flush
+from repro.core.trellis import build_acs_tables
+from repro.core.viterbi import blocks_from_llrs, forward_fused, init_metric
+from repro.core.viterbi_ref import forward_ref, viterbi_decode_ref
+
+SPEC = CODE_K7_CCSDS
+
+
+def _noisy_llrs(bits, spec, sigma, seed=0):
+    rng = np.random.default_rng(seed)
+    coded = conv_encode(bits, spec)
+    sym = 1.0 - 2.0 * coded.astype(np.float64)
+    return sym + rng.normal(0.0, sigma, sym.shape)
+
+
+@pytest.mark.parametrize("rho", [1, 2, 3])
+def test_noiseless_roundtrip(rho):
+    rng = np.random.default_rng(1)
+    bits = tail_flush(rng.integers(0, 2, 300), SPEC)
+    llr = _noisy_llrs(bits, SPEC, 0.0)
+    pad = (-len(bits)) % rho
+    if pad:
+        llr = np.concatenate([llr, np.zeros((pad, SPEC.beta))])
+    dec = decode_frames(
+        jnp.asarray(llr)[None], SPEC, rho=rho, initial_state=0, final_state=0
+    )
+    np.testing.assert_array_equal(np.array(dec[0])[: len(bits)], bits)
+
+
+@pytest.mark.parametrize("rho", [1, 2])
+def test_matrix_form_equals_algorithm1(rho):
+    """Path metrics of the fused matmul forward == Algorithm 1, exactly
+    (modulo the per-step renormalization shift)."""
+    rng = np.random.default_rng(2)
+    n = 24
+    bits = rng.integers(0, 2, n)
+    llr = _noisy_llrs(bits, SPEC, 0.7, seed=3)
+    lam_ref, _ = forward_ref(llr, SPEC, initial_state=0)
+
+    tables = build_acs_tables(SPEC, rho)
+    blocks = blocks_from_llrs(jnp.asarray(llr, jnp.float32)[None], rho)
+    lam0 = init_metric(1, SPEC.n_states, 0)
+    lam, _ = forward_fused(
+        blocks, lam0, tables, AcsPrecision(renorm=False)
+    )
+    got = np.array(lam[0], dtype=np.float64)
+    want = lam_ref[n - 1]
+    # compare up to the -1e9 "impossible" floor handling
+    m = want > -1.0e8
+    np.testing.assert_allclose(got[m], want[m], rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("sigma", [0.3, 0.6, 1.0])
+def test_decode_matches_reference_noisy(sigma):
+    rng = np.random.default_rng(4)
+    bits = tail_flush(rng.integers(0, 2, 198), SPEC)  # 198+6=204, %4 != 0
+    llr = _noisy_llrs(bits, SPEC, sigma, seed=5)
+    pad = (-len(bits)) % 2
+    llr_p = np.concatenate([llr, np.zeros((pad, SPEC.beta))]) if pad else llr
+    want = viterbi_decode_ref(llr, SPEC, initial_state=0, final_state=0)
+    got = np.array(
+        decode_frames(
+            jnp.asarray(llr_p)[None], SPEC, rho=2, initial_state=0, final_state=0
+        )[0]
+    )[: len(bits)]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_radix2_equals_radix4_path_metrics():
+    """Eq. 34: two radix-2 steps == one radix-4 step, exactly."""
+    rng = np.random.default_rng(6)
+    llr = jnp.asarray(rng.normal(0, 1, (8, 40, 2)), jnp.float32)
+    lam0 = init_metric(8, SPEC.n_states, None)
+    for rho_pair in [(1, 2)]:
+        t1 = build_acs_tables(SPEC, rho_pair[0])
+        t2 = build_acs_tables(SPEC, rho_pair[1])
+        lam_a, _ = forward_fused(
+            blocks_from_llrs(llr, rho_pair[0]), lam0, t1,
+            AcsPrecision(renorm=False),
+        )
+        lam_b, _ = forward_fused(
+            blocks_from_llrs(llr, rho_pair[1]), lam0, t2,
+            AcsPrecision(renorm=False),
+        )
+        np.testing.assert_allclose(
+            np.array(lam_a), np.array(lam_b), rtol=1e-5, atol=1e-4
+        )
+
+
+@given(
+    n_bits=st.integers(16, 120),
+    sigma=st.floats(0.0, 1.2),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_decode_optimality(n_bits, sigma, seed):
+    """Property: the decoded path's metric is >= the true path's metric
+    (Viterbi returns the max-likelihood path), and with tail flush both
+    decoders agree with the scalar oracle."""
+    rng = np.random.default_rng(seed)
+    bits = tail_flush(rng.integers(0, 2, n_bits), SPEC)
+    llr = _noisy_llrs(bits, SPEC, sigma, seed=seed + 1)
+    pad = (-len(bits)) % 2
+    llr_p = np.concatenate([llr, np.zeros((pad, SPEC.beta))]) if pad else llr
+    dec = np.array(
+        decode_frames(
+            jnp.asarray(llr_p)[None], SPEC, rho=2, initial_state=0, final_state=0
+        )[0]
+    )[: len(bits)]
+
+    def path_metric(b):
+        coded = conv_encode(b, SPEC)
+        return float(((1.0 - 2.0 * coded) * llr).sum())
+
+    assert path_metric(dec) >= path_metric(bits) - 1e-3
+
+
+def test_tiled_stream_noiseless_exact():
+    rng = np.random.default_rng(7)
+    bits = rng.integers(0, 2, 4096)
+    coded = conv_encode(bits, SPEC)
+    llr = jnp.asarray(1.0 - 2.0 * coded.astype(np.float32))
+    out = np.array(tiled_decode_stream(llr, SPEC))
+    np.testing.assert_array_equal(out, bits)
+
+
+def test_tiled_stream_matches_full_viterbi_low_noise():
+    """Tiling with enough overlap (v >= ~5k) reproduces full-stream
+    Viterbi decisions (paper §III: overlap carries enough history)."""
+    rng = np.random.default_rng(8)
+    n = 2048
+    bits = rng.integers(0, 2, n)
+    llr = _noisy_llrs(bits, SPEC, 0.5, seed=9)
+    full = np.array(
+        decode_frames(
+            jnp.asarray(np.pad(llr, ((0, 0), (0, 0))))[None],
+            SPEC,
+            rho=2,
+            initial_state=None,
+            final_state=None,
+        )[0]
+    )
+    tiled = np.array(
+        tiled_decode_stream(
+            jnp.asarray(llr, jnp.float32),
+            SPEC,
+            TiledDecoderConfig(frame_len=64, overlap=48),
+        )
+    )
+    # identical except possibly a handful of edge decisions
+    assert (tiled != full).mean() < 2e-3
+
+
+def test_ber_soft_beats_hard_and_theory_sanity():
+    """Fig. 13 neighborhood: soft decoding at Eb/N0=4dB must be far below
+    the uncoded curve, and hard-decision must be worse than soft."""
+    key = jax.random.PRNGKey(0)
+    n = 60_000
+    cfg = TiledDecoderConfig(frame_len=64, overlap=48)
+    soft = measure_ber(SPEC, 4.0, n, key, cfg=cfg)
+    hard = measure_ber(SPEC, 4.0, n, key, cfg=cfg, hard=True)
+    assert soft.ber < uncoded_ber_theory(4.0) / 5
+    assert soft.ber < 2e-3
+    assert hard.ber > soft.ber
+
+
+def test_bf16_channel_ok_bf16_carry_degrades():
+    """Paper Table I / Fig. 13 conclusion, on TPU dtypes: bf16 channel LLRs
+    are harmless; bf16 path-metric carry degrades BER."""
+    key = jax.random.PRNGKey(1)
+    n = 40_000
+    cfg = TiledDecoderConfig(frame_len=64, overlap=48)
+    base = measure_ber(
+        SPEC, 3.0, n, key, cfg=cfg, precision=AcsPrecision()
+    )
+    bf16_ch = measure_ber(
+        SPEC, 3.0, n, key, cfg=cfg,
+        precision=AcsPrecision(
+            matmul_dtype=jnp.bfloat16, channel_dtype=jnp.bfloat16
+        ),
+    )
+    # bf16 channel: BER within 2x of full precision (paper: "without any
+    # problem")
+    assert bf16_ch.ber <= max(2.0 * base.ber, base.ber + 1e-4)
+
+
+def test_encoder_jax_matches_numpy():
+    rng = np.random.default_rng(10)
+    bits = rng.integers(0, 2, 257)
+    a = conv_encode(bits, SPEC)
+    b = np.array(conv_encode_jax(jnp.asarray(bits), SPEC))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_llr_scaling_invariance():
+    """Any positive LLR scaling leaves decisions unchanged (channel.py)."""
+    rng = np.random.default_rng(11)
+    bits = tail_flush(rng.integers(0, 2, 100), SPEC)
+    llr = _noisy_llrs(bits, SPEC, 0.8, seed=12)
+    pad = (-len(bits)) % 2
+    llr = np.concatenate([llr, np.zeros((pad, 2))]) if pad else llr
+    d1 = decode_frames(jnp.asarray(llr)[None], SPEC, 2, 0, 0)
+    d2 = decode_frames(jnp.asarray(llr * 7.3)[None], SPEC, 2, 0, 0)
+    np.testing.assert_array_equal(np.array(d1), np.array(d2))
+
+
+def test_pack_survivors_identical_decode():
+    """§Perf C2: packed-survivor decode is bit-identical to unpacked."""
+    rng = np.random.default_rng(21)
+    llr = jnp.asarray(rng.normal(0, 1, (8, 96, 2)), jnp.float32)
+    a = decode_frames(llr, SPEC, 2, None, None)
+    b = decode_frames(llr, SPEC, 2, None, None, pack_survivors=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_dot_identical_decisions():
+    """§Perf C5: split-dot (bf16 metrics + f32 routing) decodes like f32
+    even without renormalization."""
+    from repro.core.encoder import conv_encode, tail_flush
+
+    rng = np.random.default_rng(22)
+    bits = tail_flush(rng.integers(0, 2, 300), SPEC)
+    llr = _noisy_llrs(bits, SPEC, 0.6, seed=23)
+    pad = (-len(bits)) % 2
+    llr = np.concatenate([llr, np.zeros((pad, 2))]) if pad else llr
+    ref = decode_frames(jnp.asarray(llr)[None], SPEC, 2, 0, 0)
+    prec = AcsPrecision(
+        matmul_dtype=jnp.bfloat16,
+        channel_dtype=jnp.bfloat16,
+        renorm=False,
+        split_dot=True,
+    )
+    got = decode_frames(
+        jnp.asarray(llr, jnp.float32)[None], SPEC, 2, 0, 0, precision=prec
+    )
+    assert (np.asarray(got) != np.asarray(ref)).mean() < 5e-3
