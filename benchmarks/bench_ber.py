@@ -1,10 +1,15 @@
 """Fig. 13 analog: BER vs Eb/N0 for precision combinations.
 
+Reproduces: paper Fig. 13 (BER curves per precision combination) plus
+the §II-C hard-vs-soft ~2 dB gap.  Invocation:
+
+    PYTHONPATH=src python -m benchmarks.bench_ber
+    PYTHONPATH=src python -m benchmarks.run --only ber
+
 Paper's finding: the accumulated path metric (C) must stay full precision;
 the channel LLRs may be half precision "without any problem".  We verify
 the same structure with bf16 (TPU's native low precision): bf16 channel
 tracks f32 closely, bf16 carry degrades at higher SNR.
-Also includes hard-decision for the ~2 dB soft-decision gap (paper §II-C).
 """
 from __future__ import annotations
 

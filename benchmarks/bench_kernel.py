@@ -1,6 +1,14 @@
 """Pallas kernel sanity bench: interpret-mode kernel vs jnp oracle
 (correctness + relative CPU cost; TPU timing is out of scope here) and
-survivor-packing traffic accounting (the paper's 32-bit compaction)."""
+survivor-packing traffic accounting (the paper's 32-bit compaction).
+
+Reproduces: the paper's §VIII kernel-level claims — the Fig. 15 packed
+tensor-op as a TPU Mosaic kernel, and the §VIII output-compaction
+bandwidth saving (measured as survivor-store bytes).  Invocation:
+
+    PYTHONPATH=src python -m benchmarks.bench_kernel
+    PYTHONPATH=src python -m benchmarks.run --only kernel
+"""
 from __future__ import annotations
 
 import time

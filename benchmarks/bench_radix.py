@@ -1,5 +1,11 @@
 """§V / §VIII-C analog: radix-2 vs radix-4 cost.
 
+Reproduces: the paper's §V radix-2 vs §VIII radix-4 tensor-op counts
+(Q per stage) as wall-time on the TPU formulation.  Invocation:
+
+    PYTHONPATH=src python -m benchmarks.bench_radix
+    PYTHONPATH=src python -m benchmarks.run --only radix
+
 The paper counts Q = tensor ops per trellis stage on 16x16 fragments:
 radix-2 Q=2 (k=7), radix-4 packed Q=0.5.  On the TPU formulation the
 analogue is (matmul FLOPs per stage, sequential steps per stage): radix-4

@@ -1,10 +1,20 @@
-"""Table I analog: decoder throughput per precision combination.
+"""Table I analog: decoder throughput per precision combination, plus the
+serving-scenario matrix of the unified decoder front door.
 
-The paper's Table I sweeps {C, channel} x {single, half} on a V100 and
-reports Gb/s.  Here: {carry, channel} x {f32, bf16} on the tensor-ACS
-decoder.  CPU wall-times are NOT TPU predictions — the derived column
-reports measured CPU Mb/s plus the v5e roofline-projected Gb/s from the
-dry-run (experiments/dryrun), which is the deployable number.
+Reproduces: paper Table I (precision sweep {C, channel} x {single, half},
+reported in Gb/s on a V100) — here {carry, channel} x {f32, bf16} on the
+tensor-ACS forward — and extends it with one row per decode scenario
+(tiled / chunked-streaming / sharded / batch, DESIGN.md §6) so all four
+serving paths are benchmarked from one front door.  Invocation:
+
+    PYTHONPATH=src python -m benchmarks.bench_throughput
+    PYTHONPATH=src python -m benchmarks.run --only throughput
+
+CPU wall-times are NOT TPU predictions — the derived column reports
+measured CPU Mb/s plus the v5e roofline-projected Gb/s from the dry-run
+(experiments/dryrun), which is the deployable number.  The sharded row
+uses every visible device (set
+XLA_FLAGS=--xla_force_host_platform_device_count=N for a CPU demo).
 """
 from __future__ import annotations
 
@@ -14,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import CODE_K7_CCSDS, AcsPrecision, TiledDecoderConfig
+from repro.core.decoder import ViterbiDecoder
 from repro.core.trellis import build_acs_tables
 from repro.core.viterbi import blocks_from_llrs, forward_fused, init_metric
 
@@ -26,6 +37,57 @@ COMBOS = [
                                     carry_dtype=jnp.bfloat16,
                                     channel_dtype=jnp.bfloat16)),
 ]
+
+
+def bench_modes(
+    n_streams: int = 16, stream_len: int = 4096, iters: int = 3
+):
+    """One row per decode scenario of the ViterbiDecoder front door
+    (DESIGN.md §6): tiled windows, stateful chunked streaming, sharded
+    multi-device, and one-shot batch — same code, same LLRs."""
+    spec = CODE_K7_CCSDS
+    key = jax.random.PRNGKey(1)
+    llrs = jax.random.normal(key, (n_streams, stream_len, spec.beta))
+    decoder = ViterbiDecoder(spec, decision_depth=1024)
+    tcfg = TiledDecoderConfig()
+
+    def run_tiled():
+        return jax.vmap(
+            lambda x: decoder.decode_stream_tiled(x, tcfg)
+        )(llrs)
+
+    def run_chunked():
+        return decoder.decode_stream_chunked(
+            llrs, chunk_len=1024, initial_state=None
+        )
+
+    def run_batch():
+        return decoder.decode_batch(llrs, None, None)
+
+    def run_sharded():
+        from repro.distributed.decoder import sharded_decode_streams
+
+        return sharded_decode_streams(llrs, spec, cfg=tcfg)
+
+    n_dev = len(jax.devices())
+    modes = [
+        ("mode/tiled", jax.jit(run_tiled), ""),
+        ("mode/chunked-streaming", run_chunked, ""),
+        ("mode/batch", jax.jit(run_batch), ""),
+        (f"mode/sharded-{n_dev}dev", run_sharded, f"{n_dev}dev"),
+    ]
+    rows = []
+    decoded_bits = n_streams * stream_len
+    for name, fn, note in modes:
+        fn().block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn().block_until_ready()
+        dt = (time.perf_counter() - t0) / iters
+        mbps = decoded_bits / dt / 1e6
+        extra = f";{note}" if note else ""
+        rows.append((name, dt * 1e6, f"{mbps:.1f}Mb/s-cpu{extra}"))
+    return rows
 
 
 def bench(n_frames: int = 2048, n_stages: int = 128, iters: int = 5):
@@ -55,6 +117,9 @@ def bench(n_frames: int = 2048, n_stages: int = 128, iters: int = 5):
         rows.append(
             (f"tableI/{name}", dt * 1e6, f"{mbps:.1f}Mb/s-cpu")
         )
+    rows += bench_modes(
+        n_streams=max(4, n_frames // 128), stream_len=n_stages * 32
+    )
     return rows
 
 

@@ -4,6 +4,7 @@
 
 Prints ``name,us_per_call,derived`` CSV:
   * bench_throughput — Table I (precision combos, decode throughput)
+                       + serving-mode matrix (tiled/chunked/sharded/batch)
   * bench_ber        — Fig. 13 (BER vs Eb/N0 per precision, + hard/soft)
   * bench_radix      — §V/§VIII-C (radix-2 vs radix-4 Q counts & timing)
   * bench_kernel     — Pallas ACS kernel vs oracle + survivor packing

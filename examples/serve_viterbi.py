@@ -1,8 +1,17 @@
 """Viterbi decoding service: batched stream decode with throughput + BER
-accounting — the paper's serving workload (§IX) as the framework runs it.
+accounting — the paper's serving workload (§IX) through the unified
+``ViterbiDecoder`` front door (DESIGN.md §6).
 
     PYTHONPATH=src python examples/serve_viterbi.py [--streams 16]
         [--stream-len 8192] [--batches 5] [--ebn0 4.0]
+        [--mode tiled|chunked|sharded|batch]
+
+Modes: ``tiled`` (default) is the paper's §III overlapping-window decode;
+``chunked`` is stateful streaming (survivor ring buffer carried across
+chunks — zero redundant ACS work); ``sharded`` spreads streams over every
+visible device (demo on CPU with
+XLA_FLAGS=--xla_force_host_platform_device_count=8); ``batch`` decodes
+each stream as one truncated-Viterbi frame.
 """
 import argparse
 import time
@@ -10,9 +19,9 @@ import time
 import jax
 import numpy as np
 
-from repro.configs.viterbi_k7 import CONFIG as VCFG, smoke_config
+from repro.configs.viterbi_k7 import CONFIG as VCFG
 from repro.data.pipeline import ChannelStream
-from repro.serve.step import make_viterbi_serve_step
+from repro.serve.step import make_viterbi_decoder, make_viterbi_serve_step
 
 
 def main():
@@ -21,6 +30,10 @@ def main():
     ap.add_argument("--stream-len", type=int, default=8192)
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--ebn0", type=float, default=4.0)
+    ap.add_argument("--mode", default="tiled",
+                    choices=["tiled", "chunked", "sharded", "batch"])
+    ap.add_argument("--chunk-len", type=int, default=2048)
+    ap.add_argument("--decision-depth", type=int, default=2048)
     args = ap.parse_args()
 
     import dataclasses
@@ -34,25 +47,48 @@ def main():
         stream_len=args.stream_len,
         ebn0_db=args.ebn0,
     )
-    step = jax.jit(make_viterbi_serve_step(vcfg))
+
+    if args.mode in ("tiled", "batch"):
+        run = jax.jit(make_viterbi_serve_step(vcfg, mode=args.mode))
+    elif args.mode == "chunked":
+        decoder = make_viterbi_decoder(
+            vcfg, decision_depth=args.decision_depth
+        )
+
+        def run(llrs):
+            return decoder.decode_stream_chunked(
+                llrs, chunk_len=args.chunk_len, initial_state=None
+            )
+    else:  # sharded
+        from repro.distributed.decoder import sharded_decode_streams
+
+        def run(llrs):
+            return sharded_decode_streams(
+                llrs,
+                vcfg.spec,
+                cfg=vcfg.tiled,
+                precision=vcfg.precision,
+                pack_survivors=vcfg.pack_survivors,
+            )
 
     # warmup/compile
     bits, llrs = src.batch_at(0)
-    step(llrs).block_until_ready()
+    run(llrs).block_until_ready()
 
     total_bits = total_err = 0
     t0 = time.perf_counter()
     for i in range(args.batches):
         bits, llrs = src.batch_at(i)
-        out = step(llrs)
+        out = run(llrs)
         out.block_until_ready()
         total_err += int((np.asarray(out) != np.asarray(bits)).sum())
         total_bits += bits.size
     dt = time.perf_counter() - t0
 
     print(
-        f"decoded {total_bits} bits in {dt:.2f}s -> "
-        f"{total_bits/dt/1e6:.2f} Mb/s (CPU; v5e projection in "
+        f"[{args.mode}] decoded {total_bits} bits in {dt:.2f}s -> "
+        f"{total_bits/dt/1e6:.2f} Mb/s "
+        f"({len(jax.devices())} dev; v5e projection in "
         f"EXPERIMENTS.md §Roofline)"
     )
     print(f"service BER @ {args.ebn0} dB: {total_err/total_bits:.3e}")

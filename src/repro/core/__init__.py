@@ -18,5 +18,10 @@ from .viterbi import (  # noqa: F401
     tiled_decode_stream,
     traceback,
 )
+from .decoder import (  # noqa: F401
+    DEFAULT_DECISION_DEPTH,
+    StreamState,
+    ViterbiDecoder,
+)
 from .encoder import conv_encode, conv_encode_jax, tail_flush  # noqa: F401
 from .viterbi_ref import viterbi_decode_ref  # noqa: F401

@@ -1,0 +1,355 @@
+"""Unified decoder front door (DESIGN.md §6).
+
+``ViterbiDecoder`` owns the precompiled fused-ACS tables, the precision
+policy and the kernel/XLA backend choice, and exposes every decode shape
+the service needs from one object:
+
+  * ``decode_batch``         — one-shot decode of independent frames
+    (the paper's §IX workload, previously ``decode_frames``);
+  * ``decode_stream_tiled``  — overlapping-window stream decode (paper
+    §III tiling, previously ``tiled_decode_stream``): latency-optimal,
+    but every window re-runs ACS on ``2*overlap`` warmup stages;
+  * ``init_stream_state`` / ``decode_chunk`` / ``flush_stream`` —
+    **stateful chunked streaming**: path metrics and a decision-depth
+    survivor ring buffer are carried across chunks, so arbitrarily long
+    streams decode incrementally with ZERO redundant ACS work (the
+    tensor-core hot loop touches every stage exactly once) and emit
+    delayed bit decisions that are bit-exact with full-sequence decode
+    beyond the decision depth;
+  * ``decode_sharded``       — the frame axis spread over every device
+    via ``shard_map`` (repro.distributed.decoder): frames are
+    embarrassingly parallel, W stays replicated.
+
+The streaming mode is the classic decision-delay (truncated-traceback)
+Viterbi: after consuming chunk stages [pos, pos+T), the decoder traces
+back from the argmax state at the chunk front through the ring buffer
+and commits the decisions that are now >= ``decision_depth`` stages old.
+For k=7 codes a depth of a few hundred stages already makes survivor
+paths merge with overwhelming probability; the default (5120 stages,
+paper's "~5K" guidance) makes disagreement with full-sequence decode
+unobservable at any operating SNR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .trellis import AcsTables, CodeSpec, build_acs_tables
+from .viterbi import (
+    AcsPrecision,
+    TiledDecoderConfig,
+    blocks_from_llrs,
+    decode_frames,
+    forward_fused,
+    init_metric,
+    tiled_decode_stream,
+    traceback,
+)
+
+__all__ = ["StreamState", "ViterbiDecoder", "DEFAULT_DECISION_DEPTH"]
+
+# ~5K stages of decision delay (DESIGN.md §6): survivor merge is certain
+# for any constraint length we serve, at ~decision_depth*S bytes of state.
+DEFAULT_DECISION_DEPTH = 5120
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamState:
+    """Carry of the chunked streaming decoder.
+
+    lam  : (F, S) path metrics at the current stream front.
+    hist : (D, F, S) int8 survivor ring (or (D, F, S//16) int32 packed),
+           chronological — hist[i] is radix step ``pos - D + i``; entries
+           for negative steps are zero filler, never used for committed
+           decisions (the warmup region is sliced off host-side).
+    pos  : host-side count of radix steps consumed so far.  Kept out of
+           the jitted carry on purpose: chunk shapes are static, only the
+           number of *valid* emitted bits depends on pos, and that slice
+           happens outside jit.
+    """
+
+    lam: jnp.ndarray
+    hist: jnp.ndarray
+    pos: int
+
+    @property
+    def depth_steps(self) -> int:
+        return self.hist.shape[0]
+
+    @property
+    def n_frames(self) -> int:
+        return self.lam.shape[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tables", "precision", "use_kernel", "pack_survivors"),
+)
+def _chunk_step(
+    hist: jnp.ndarray,
+    lam: jnp.ndarray,
+    blocks: jnp.ndarray,
+    tables: AcsTables,
+    precision: AcsPrecision,
+    use_kernel: bool,
+    pack_survivors: bool,
+):
+    """One streaming chunk: T new ACS steps + one delayed traceback.
+
+    Returns (new_hist, new_lam, bits) with bits (F, T*rho) — the decisions
+    for the T OLDEST steps in the ring window [pos-D, pos+T), i.e. steps
+    [pos-D, pos+T-D), each committed with >= D stages of lookahead.
+    """
+    lam2, phis = forward_fused(
+        blocks, lam, tables, precision, use_kernel, pack_survivors
+    )
+    full = jnp.concatenate([hist, phis], axis=0)  # (D+T, F, S)
+    fs = jnp.argmax(lam2, axis=-1).astype(jnp.int32)
+    bits = traceback(full, fs, tables)  # (F, (D+T)*rho)
+    T = phis.shape[0]
+    out = bits[:, : T * tables.rho]
+    return full[full.shape[0] - hist.shape[0]:], lam2, out
+
+
+@functools.partial(jax.jit, static_argnames=("tables", "final_state"))
+def _flush_step(
+    hist: jnp.ndarray,
+    lam: jnp.ndarray,
+    tables: AcsTables,
+    final_state: Optional[int],
+):
+    """Commit the last D steps still in the ring (end of stream)."""
+    if final_state is None:
+        fs = jnp.argmax(lam, axis=-1).astype(jnp.int32)
+    else:
+        fs = jnp.full((lam.shape[0],), final_state, jnp.int32)
+    return traceback(hist, fs, tables)  # (F, D*rho)
+
+
+class ViterbiDecoder:
+    """One front door for every decode scenario (DESIGN.md §6).
+
+    Construct once per (code, radix, precision, backend) — the fused-ACS
+    tables are built eagerly and every entry point reuses the same jitted
+    computations (tables are hashed by identity, so one decoder instance
+    never re-traces for a second call of the same shape).
+    """
+
+    def __init__(
+        self,
+        spec: CodeSpec,
+        rho: int = 2,
+        precision: Optional[AcsPrecision] = None,
+        use_kernel: bool = False,
+        pack_survivors: bool = False,
+        decision_depth: int = DEFAULT_DECISION_DEPTH,
+    ):
+        if decision_depth % rho:
+            raise ValueError(
+                f"decision_depth={decision_depth} not divisible by rho={rho}"
+            )
+        self.spec = spec
+        self.rho = rho
+        self.tables = build_acs_tables(spec, rho)
+        self.precision = precision or AcsPrecision()
+        self.use_kernel = use_kernel
+        self.pack_survivors = pack_survivors
+        self.decision_depth = decision_depth
+
+    @classmethod
+    def from_config(
+        cls,
+        vcfg,
+        precision: Optional[AcsPrecision] = None,
+        use_kernel: bool = False,
+        decision_depth: Optional[int] = None,
+    ) -> "ViterbiDecoder":
+        """Build from a configs.viterbi_k7.ViterbiConfig (the single
+        vcfg -> decoder mapping; serve/step.py delegates here)."""
+        return cls(
+            spec=vcfg.spec,
+            rho=vcfg.rho,
+            precision=precision or vcfg.precision,
+            use_kernel=use_kernel,
+            pack_survivors=getattr(vcfg, "pack_survivors", False),
+            decision_depth=decision_depth or DEFAULT_DECISION_DEPTH,
+        )
+
+    # -- batch ------------------------------------------------------------
+
+    def decode_batch(
+        self,
+        llrs: jnp.ndarray,
+        initial_state: Optional[int] = 0,
+        final_state: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """One-shot decode of independent frames.  llrs: (F, n, beta)."""
+        return decode_frames(
+            llrs,
+            self.spec,
+            rho=self.rho,
+            initial_state=initial_state,
+            final_state=final_state,
+            precision=self.precision,
+            use_kernel=self.use_kernel,
+            pack_survivors=self.pack_survivors,
+        )
+
+    # -- tiled stream (stateless, latency-optimal) ------------------------
+
+    def decode_stream_tiled(
+        self,
+        llrs: jnp.ndarray,
+        cfg: Optional[TiledDecoderConfig] = None,
+    ) -> jnp.ndarray:
+        """Overlapping-window decode of one (n, beta) stream (paper §III)."""
+        cfg = cfg or TiledDecoderConfig(rho=self.rho)
+        if cfg.rho != self.rho:
+            raise ValueError(f"cfg.rho={cfg.rho} != decoder rho={self.rho}")
+        return tiled_decode_stream(
+            llrs,
+            self.spec,
+            cfg,
+            precision=self.precision,
+            use_kernel=self.use_kernel,
+            pack_survivors=self.pack_survivors,
+        )
+
+    # -- stateful chunked streaming (throughput-optimal) ------------------
+
+    def init_stream_state(
+        self,
+        n_frames: int,
+        initial_state: Optional[int] = None,
+        decision_depth: Optional[int] = None,
+    ) -> StreamState:
+        """Fresh state for F parallel streams decoded chunk by chunk."""
+        depth = decision_depth or self.decision_depth
+        if depth % self.rho:
+            raise ValueError(
+                f"decision_depth={depth} not divisible by rho={self.rho}"
+            )
+        d_steps = depth // self.rho
+        S = self.spec.n_states
+        # lam stays f32 in the state (forward_fused casts to carry_dtype
+        # internally and returns f32) so the jitted chunk signature is
+        # stable across chunks for every precision policy
+        lam = init_metric(n_frames, S, initial_state)
+        if self.pack_survivors:
+            hist = jnp.zeros((d_steps, n_frames, S // 16), jnp.int32)
+        else:
+            hist = jnp.zeros((d_steps, n_frames, S), jnp.int8)
+        return StreamState(lam=lam, hist=hist, pos=0)
+
+    def decode_chunk(
+        self, state: StreamState, llrs: jnp.ndarray
+    ) -> Tuple[StreamState, jnp.ndarray]:
+        """Consume one LLR chunk, emit the decisions that became final.
+
+        llrs: (F, c, beta) with c divisible by rho.  Returns
+        (new_state, bits) where bits is (F, m*rho) for the m chunk steps
+        whose decisions now have >= decision_depth stages of lookahead —
+        empty (F, 0) during warmup, (F, c) once pos >= decision_depth.
+        Across decode_chunk calls plus flush_stream, every input stage is
+        emitted exactly once, in order.
+        """
+        F, c, _ = llrs.shape
+        if F != state.n_frames:
+            raise ValueError(f"state has {state.n_frames} frames, got {F}")
+        blocks = blocks_from_llrs(jnp.asarray(llrs), self.rho)
+        hist, lam, bits = _chunk_step(
+            state.hist,
+            state.lam,
+            blocks,
+            self.tables,
+            self.precision,
+            self.use_kernel,
+            self.pack_survivors,
+        )
+        T = c // self.rho
+        D = state.depth_steps
+        # emitted window covers steps [pos-D, pos+T-D); drop negatives
+        n_valid = max(0, state.pos + T - D) - max(0, state.pos - D)
+        out = bits[:, (T - n_valid) * self.rho:] if n_valid else bits[:, :0]
+        return StreamState(lam=lam, hist=hist, pos=state.pos + T), out
+
+    def flush_stream(
+        self, state: StreamState, final_state: Optional[int] = None
+    ) -> jnp.ndarray:
+        """End of stream: commit the decisions still inside the ring.
+
+        Returns (F, min(pos, depth)*rho) bits.  With ``final_state`` the
+        traceback is pinned (tail-flushed streams); otherwise it starts
+        from the per-frame argmax metric, exactly like decode_batch.
+        """
+        bits = _flush_step(state.hist, state.lam, self.tables, final_state)
+        valid = min(state.pos, state.depth_steps)
+        return bits[:, (state.depth_steps - valid) * self.rho:]
+
+    def decode_stream_chunked(
+        self,
+        llrs: jnp.ndarray,
+        chunk_len: int = 4096,
+        initial_state: Optional[int] = None,
+        final_state: Optional[int] = None,
+        decision_depth: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Convenience driver: chunk (F, n, beta) streams through the
+        stateful path and reassemble the full (F, n) decision array.
+
+        The final chunk is the (smaller) remainder, so at most rho-1
+        trailing stages are ever zero-LLR padded (a zero LLR carries no
+        information); padded decisions are sliced off.  ``final_state``
+        pins the traceback at the true last stage, so it is rejected
+        when that stage would sit before padding (n not a multiple of
+        rho) — pad or tail-flush the stream to a rho multiple first.
+        """
+        F, n, beta = llrs.shape
+        c = chunk_len - (chunk_len % self.rho) or self.rho
+        pad = (-n) % self.rho
+        if pad and final_state is not None:
+            raise ValueError(
+                f"final_state requires n divisible by rho={self.rho}; "
+                f"got n={n} (the pin would land on padded stages)"
+            )
+        state = self.init_stream_state(
+            F, initial_state=initial_state, decision_depth=decision_depth
+        )
+        outs = []
+        llrs = jnp.asarray(llrs)
+        if pad:
+            llrs = jnp.pad(llrs, ((0, 0), (0, pad), (0, 0)))
+        for lo in range(0, n, c):
+            state, bits = self.decode_chunk(state, llrs[:, lo : lo + c])
+            outs.append(bits)
+        outs.append(self.flush_stream(state, final_state=final_state))
+        return jnp.concatenate(outs, axis=1)[:, :n]
+
+    # -- sharded ----------------------------------------------------------
+
+    def decode_sharded(
+        self,
+        llrs: jnp.ndarray,
+        mesh=None,
+        initial_state: Optional[int] = 0,
+        final_state: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """decode_batch with the frame axis sharded over devices
+        (DESIGN.md §6; repro.distributed.decoder)."""
+        from repro.distributed.decoder import sharded_decode_frames
+
+        return sharded_decode_frames(
+            llrs,
+            self.spec,
+            rho=self.rho,
+            mesh=mesh,
+            initial_state=initial_state,
+            final_state=final_state,
+            precision=self.precision,
+            use_kernel=self.use_kernel,
+            pack_survivors=self.pack_survivors,
+        )

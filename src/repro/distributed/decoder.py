@@ -1,0 +1,187 @@
+"""Sharded multi-device Viterbi decode (DESIGN.md §6).
+
+Frames are embarrassingly parallel: the ACS recursion never mixes
+information across the frame axis, so decode scales to any device count
+by sharding frames (the MXU lane dimension) and replicating the fused
+operand W = [Theta-hat^T ; P] — no collectives at all, the same
+"frames-in-lanes" layout as the single-device path, tiled once more
+across the mesh.  ``shard_map`` (not plain pjit sharding) is used so the
+per-device program is EXACTLY the single-device program: numerics are
+bit-identical to one device by construction, and the Pallas kernel path
+(``use_kernel=True``) drops in unchanged because each shard calls it on
+a local (T, F/ndev, B) block.
+
+Both serving shapes are covered:
+  * ``sharded_decode_frames``  — (F, n, beta) independent frames,
+    frame axis sharded (the decode_batch path);
+  * ``sharded_decode_streams`` — (N, n, beta) long streams, stream axis
+    sharded, each device running the tiled window decoder locally (the
+    serve/step.py path).
+
+Frame counts that do not divide the device count are zero-LLR padded
+(a zero LLR is information-free) and the padding is sliced off.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.trellis import CodeSpec, build_acs_tables
+from repro.core.viterbi import (
+    AcsPrecision,
+    TiledDecoderConfig,
+    blocks_from_llrs,
+    forward_fused,
+    init_metric,
+    tiled_decode_stream,
+    traceback,
+)
+
+__all__ = [
+    "frame_mesh",
+    "sharded_decode_frames",
+    "sharded_decode_streams",
+]
+
+
+def frame_mesh(n_devices: Optional[int] = None, axis: str = "frames") -> Mesh:
+    """1-D mesh over the first ``n_devices`` (default: all) devices."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), (axis,))
+
+
+def _pad_to(llrs: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    pad = (-llrs.shape[0]) % multiple
+    if not pad:
+        return llrs
+    return jnp.concatenate(
+        [llrs, jnp.zeros((pad,) + llrs.shape[1:], llrs.dtype)], axis=0
+    )
+
+
+@functools.lru_cache(maxsize=32)
+def _frames_fn(
+    spec: CodeSpec,
+    rho: int,
+    mesh: Mesh,
+    axis: str,
+    initial_state: Optional[int],
+    final_state: Optional[int],
+    precision: AcsPrecision,
+    use_kernel: bool,
+    pack_survivors: bool,
+):
+    """Jitted shard_map decode, cached so repeat calls (serving loops,
+    benchmark iterations) hit the jit cache instead of re-tracing."""
+    tables = build_acs_tables(spec, rho)
+
+    def local(llrs_loc):
+        blocks = blocks_from_llrs(llrs_loc, rho)
+        lam0 = init_metric(llrs_loc.shape[0], spec.n_states, initial_state)
+        lam, phis = forward_fused(
+            blocks, lam0, tables, precision, use_kernel, pack_survivors
+        )
+        if final_state is None:
+            fs = jnp.argmax(lam, axis=-1).astype(jnp.int32)
+        else:
+            fs = jnp.full((llrs_loc.shape[0],), final_state, jnp.int32)
+        return traceback(phis, fs, tables)
+
+    return jax.jit(
+        shard_map(
+            local, mesh=mesh, in_specs=P(axis), out_specs=P(axis),
+            check_rep=False,
+        )
+    )
+
+
+def sharded_decode_frames(
+    llrs: jnp.ndarray,
+    spec: CodeSpec,
+    rho: int = 2,
+    mesh: Optional[Mesh] = None,
+    axis: str = "frames",
+    initial_state: Optional[int] = 0,
+    final_state: Optional[int] = None,
+    precision: Optional[AcsPrecision] = None,
+    use_kernel: bool = False,
+    pack_survivors: bool = False,
+) -> jnp.ndarray:
+    """Batch decode with the frame axis sharded across ``mesh``.
+
+    llrs: (F, n, beta) -> bits (F, n).  Bit-identical to single-device
+    decode_frames: each shard runs the identical forward + traceback on
+    its local frames.
+    """
+    mesh = mesh or frame_mesh(axis=axis)
+    n_dev = mesh.shape[axis]
+    F = llrs.shape[0]
+    llrs = _pad_to(jnp.asarray(llrs), n_dev)
+    fn = _frames_fn(
+        spec, rho, mesh, axis, initial_state, final_state,
+        precision or AcsPrecision(), use_kernel, pack_survivors,
+    )
+    return fn(llrs)[:F]
+
+
+@functools.lru_cache(maxsize=32)
+def _streams_fn(
+    spec: CodeSpec,
+    cfg: TiledDecoderConfig,
+    mesh: Mesh,
+    axis: str,
+    precision: AcsPrecision,
+    use_kernel: bool,
+    pack_survivors: bool,
+):
+    decode_one = functools.partial(
+        tiled_decode_stream,
+        spec=spec,
+        cfg=cfg,
+        precision=precision,
+        use_kernel=use_kernel,
+        pack_survivors=pack_survivors,
+    )
+    return jax.jit(
+        shard_map(
+            jax.vmap(decode_one),
+            mesh=mesh,
+            in_specs=P(axis),
+            out_specs=P(axis),
+            check_rep=False,
+        )
+    )
+
+
+def sharded_decode_streams(
+    llrs: jnp.ndarray,
+    spec: CodeSpec,
+    cfg: Optional[TiledDecoderConfig] = None,
+    mesh: Optional[Mesh] = None,
+    axis: str = "frames",
+    precision: Optional[AcsPrecision] = None,
+    use_kernel: bool = False,
+    pack_survivors: bool = False,
+) -> jnp.ndarray:
+    """Serve-shape decode: (N, n, beta) streams, stream axis sharded.
+
+    Each device runs the tiled window decoder (vmapped over its local
+    streams); equals jax.vmap(tiled_decode_stream) on one device.
+    """
+    mesh = mesh or frame_mesh(axis=axis)
+    n_dev = mesh.shape[axis]
+    N = llrs.shape[0]
+    llrs = _pad_to(jnp.asarray(llrs), n_dev)
+    fn = _streams_fn(
+        spec, cfg or TiledDecoderConfig(), mesh, axis,
+        precision or AcsPrecision(), use_kernel, pack_survivors,
+    )
+    return fn(llrs)[:N]

@@ -1,9 +1,17 @@
 """Serving launcher.
 
 Two services:
-  * ``--service viterbi`` — the paper's workload: batched tiled
-    tensor-ACS decode of LLR streams (default; optimized §Perf C4b
-    config via --optimized).
+  * ``--service viterbi`` — the paper's workload: batched tensor-ACS
+    decode of LLR streams through the unified ViterbiDecoder front door
+    (DESIGN.md §6; optimized §Perf C4b config via --optimized).
+    ``--mode`` selects the decode scenario:
+      - tiled   (default) stateless overlapping-window decode (§III);
+      - chunked stateful streaming — path metrics + survivor ring carried
+        across --chunk-len chunks, zero redundant ACS work;
+      - sharded streams sharded over every visible device via shard_map
+        (run under XLA_FLAGS=--xla_force_host_platform_device_count=N to
+        demo on CPU);
+      - batch   one truncated-Viterbi frame per stream.
   * ``--service lm --arch <id>`` — LM prefill + decode loop on the
     reduced config (CPU demo of the production serve path).
 """
@@ -17,36 +25,70 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _viterbi_run_fn(vcfg, args):
+    """Build run(llrs) -> bits for the selected --mode."""
+    from repro.serve.step import make_viterbi_decoder, make_viterbi_serve_step
+
+    if args.mode in ("tiled", "batch"):
+        return jax.jit(make_viterbi_serve_step(vcfg, mode=args.mode))
+    if args.mode == "chunked":
+        decoder = make_viterbi_decoder(
+            vcfg, decision_depth=args.decision_depth
+        )
+
+        def run(llrs):
+            return decoder.decode_stream_chunked(
+                llrs, chunk_len=args.chunk_len, initial_state=None
+            )
+
+        return run
+    if args.mode == "sharded":
+        from repro.distributed.decoder import sharded_decode_streams
+
+        def run(llrs):
+            return sharded_decode_streams(
+                llrs,
+                vcfg.spec,
+                cfg=vcfg.tiled,
+                precision=vcfg.precision,
+                pack_survivors=vcfg.pack_survivors,
+            )
+
+        return run
+    raise ValueError(f"unknown --mode {args.mode!r}")
+
+
 def serve_viterbi(args):
     import dataclasses
 
     from repro.configs.viterbi_k7 import CONFIG, CONFIG_OPTIMIZED
     from repro.data.pipeline import ChannelStream
-    from repro.serve.step import make_viterbi_serve_step
 
     vcfg = CONFIG_OPTIMIZED if args.optimized else CONFIG
     vcfg = dataclasses.replace(
         vcfg, stream_len=args.stream_len, batch_streams=args.streams
     )
-    step = jax.jit(make_viterbi_serve_step(vcfg))
+    run = _viterbi_run_fn(vcfg, args)
     src = ChannelStream(
         spec=vcfg.spec, n_streams=args.streams,
         stream_len=args.stream_len, ebn0_db=args.ebn0,
     )
     bits, llrs = src.batch_at(0)
-    step(llrs).block_until_ready()  # compile
+    run(llrs).block_until_ready()  # compile
     total = err = 0
     t0 = time.perf_counter()
     for i in range(args.batches):
         bits, llrs = src.batch_at(i)
-        out = step(llrs)
+        out = run(llrs)
         out.block_until_ready()
         err += int((np.asarray(out) != np.asarray(bits)).sum())
         total += bits.size
     dt = time.perf_counter() - t0
+    tag = f"viterbi-{args.mode}" + ("-opt" if args.optimized else "")
     print(
-        f"[viterbi{'-opt' if args.optimized else ''}] {total} bits in "
-        f"{dt:.2f}s = {total/dt/1e6:.2f} Mb/s (CPU), BER={err/total:.3e}"
+        f"[{tag}] {total} bits in "
+        f"{dt:.2f}s = {total/dt/1e6:.2f} Mb/s "
+        f"({len(jax.devices())} dev), BER={err/total:.3e}"
     )
 
 
@@ -92,6 +134,10 @@ def main():
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--ebn0", type=float, default=4.0)
     ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--mode", default="tiled",
+                    choices=["tiled", "chunked", "sharded", "batch"])
+    ap.add_argument("--chunk-len", type=int, default=4096)
+    ap.add_argument("--decision-depth", type=int, default=None)
     args = ap.parse_args()
     if args.service == "viterbi":
         serve_viterbi(args)

@@ -14,6 +14,7 @@ __all__ = [
     "make_prefill_step",
     "make_decode_step",
     "make_viterbi_serve_step",
+    "make_viterbi_decoder",
 ]
 
 
@@ -33,27 +34,51 @@ def make_decode_step(cfg: ArchConfig):
     return decode_step
 
 
-def make_viterbi_serve_step(vcfg, precision=None, use_kernel: bool = False):
-    """Batched tiled Viterbi decode (the paper's serving workload).
+def make_viterbi_decoder(vcfg, precision=None, use_kernel: bool = False,
+                         decision_depth=None):
+    """The service's ViterbiDecoder (DESIGN.md §6) from a ViterbiConfig."""
+    from repro.core.decoder import ViterbiDecoder
+
+    return ViterbiDecoder.from_config(
+        vcfg,
+        precision=precision,
+        use_kernel=use_kernel,
+        decision_depth=decision_depth,
+    )
+
+
+def make_viterbi_serve_step(vcfg, precision=None, use_kernel: bool = False,
+                            mode: str = "tiled"):
+    """Stateless Viterbi serve step (the paper's serving workload),
+    through the unified ViterbiDecoder front door (DESIGN.md §6).
 
     llrs: (n_streams, stream_len, beta) -> bits (n_streams, stream_len).
-    Frame tiling turns each stream into stream_len/frame_len independent
-    windows; vmap adds the stream batch — all of it pure data parallelism
-    (the paper's §III parallelization), sharded over every mesh axis.
+
+    mode="tiled": frame tiling turns each stream into stream_len/frame_len
+    independent windows; vmap adds the stream batch — all of it pure data
+    parallelism (the paper's §III parallelization), sharded over every
+    mesh axis.  mode="batch": each stream is one truncated-Viterbi frame
+    (no tiling — latency scales with stream_len).
+
+    The stateful chunked-streaming mode carries state across calls and so
+    is not a step function — build the decoder with
+    ``make_viterbi_decoder`` and drive init_stream_state / decode_chunk /
+    flush_stream directly (see launch/serve.py --mode chunked).
     """
-    from repro.core.viterbi import tiled_decode_stream
+    decoder = make_viterbi_decoder(vcfg, precision, use_kernel)
 
-    precision = precision or vcfg.precision
-
-    def serve_step(llrs):
-        fn = functools.partial(
-            tiled_decode_stream,
-            spec=vcfg.spec,
-            cfg=vcfg.tiled,
-            precision=precision,
-            use_kernel=use_kernel,
-            pack_survivors=getattr(vcfg, "pack_survivors", False),
-        )
-        return jax.vmap(fn)(llrs)
+    if mode == "tiled":
+        def serve_step(llrs):
+            fn = functools.partial(
+                decoder.decode_stream_tiled, cfg=vcfg.tiled
+            )
+            return jax.vmap(fn)(llrs)
+    elif mode == "batch":
+        def serve_step(llrs):
+            return decoder.decode_batch(
+                llrs, initial_state=None, final_state=None
+            )
+    else:
+        raise ValueError(f"unknown serve mode {mode!r}")
 
     return serve_step

@@ -1,0 +1,50 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+Test modules import ``given``/``settings``/``strategies`` from here
+instead of from hypothesis directly.  With hypothesis present this is a
+pure re-export; without it, strategy construction returns inert stubs
+and ``@given`` replaces the test with a skip — the suite still collects
+and every non-property test runs (ISSUE 1 satellite: skip, not error).
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert stand-in: combinators return more stubs, never values."""
+
+        def __call__(self, *args, **kwargs):
+            return _Strategy()
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    strategies = _Strategies()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg replacement: the strategy-filled parameters must
+            # not surface as pytest fixture requests
+            def skipped():
+                pytest.skip("hypothesis not installed")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -1,0 +1,205 @@
+"""Unified ViterbiDecoder front door (DESIGN.md §6): stateful chunked
+streaming vs full-sequence bit-exactness, packed-survivor parity,
+warmup/flush emission accounting, and sharded multi-device equivalence
+(subprocess: device count must be set before jax init)."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CODE_K7_CCSDS,
+    TiledDecoderConfig,
+    ViterbiDecoder,
+    decode_frames,
+    tiled_decode_stream,
+)
+from repro.core.encoder import conv_encode, tail_flush
+
+SPEC = CODE_K7_CCSDS
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _noisy_frame_llrs(n_frames, n_bits, sigma, seed=0):
+    """(bits, llrs): encoded random bits per frame + AWGN, as jnp f32."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (n_frames, n_bits))
+    llr = np.stack(
+        [
+            1.0 - 2.0 * conv_encode(b, SPEC)
+            + rng.normal(0.0, sigma, (n_bits, SPEC.beta))
+            for b in bits
+        ]
+    )
+    return bits, jnp.asarray(llr, jnp.float32)
+
+
+def test_chunked_stream_bitexact_full_decode():
+    """decode_chunk streaming == decode_frames on the same LLRs, bit for
+    bit, once the decision depth covers the survivor merge scale."""
+    bits, llr = _noisy_frame_llrs(3, 2048, 0.5, seed=1)
+    full = np.asarray(decode_frames(llr, SPEC, 2, None, None))
+    dec = ViterbiDecoder(SPEC, decision_depth=512)
+    got = np.asarray(
+        dec.decode_stream_chunked(llr, chunk_len=256, initial_state=None)
+    )
+    np.testing.assert_array_equal(got, full)
+    assert (got != bits).mean() < 1e-3  # and it actually decodes
+
+
+def test_chunked_uneven_chunks_emission_accounting():
+    """Uneven chunk sizes: every stage emitted exactly once, in order,
+    and the reassembled stream equals the one-shot decode."""
+    _, llr = _noisy_frame_llrs(2, 1536, 0.6, seed=2)
+    full = np.asarray(decode_frames(llr, SPEC, 2, None, None))
+    dec = ViterbiDecoder(SPEC, decision_depth=512)
+    state = dec.init_stream_state(2)
+    outs = []
+    for lo, hi in [(0, 256), (256, 900), (900, 902), (902, 1536)]:
+        state, b = dec.decode_chunk(state, llr[:, lo:hi])
+        outs.append(np.asarray(b))
+    outs.append(np.asarray(dec.flush_stream(state)))
+    # warmup: nothing can be emitted before decision_depth stages went in
+    assert outs[0].shape == (2, 0)
+    got = np.concatenate(outs, axis=1)
+    assert got.shape == full.shape
+    np.testing.assert_array_equal(got, full)
+
+
+def test_chunked_pack_survivors_parity():
+    """Packed survivor ring (16 slots / int32) streams bit-identically to
+    the unpacked int8 ring."""
+    _, llr = _noisy_frame_llrs(2, 1024, 0.7, seed=3)
+    a = ViterbiDecoder(SPEC, decision_depth=256).decode_stream_chunked(
+        llr, chunk_len=128, initial_state=None
+    )
+    b = ViterbiDecoder(
+        SPEC, decision_depth=256, pack_survivors=True
+    ).decode_stream_chunked(llr, chunk_len=128, initial_state=None)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunked_short_stream_flush_only():
+    """Streams shorter than the decision depth decode entirely at flush
+    time and still equal the one-shot decoder."""
+    _, llr = _noisy_frame_llrs(2, 200, 0.5, seed=4)
+    full = np.asarray(decode_frames(llr, SPEC, 2, None, None))
+    dec = ViterbiDecoder(SPEC)  # default depth 5120 >> 200
+    state = dec.init_stream_state(2)
+    state, b = dec.decode_chunk(state, llr)
+    assert b.shape == (2, 0)
+    got = np.asarray(dec.flush_stream(state))
+    np.testing.assert_array_equal(got, full)
+
+
+def test_chunked_pinned_states_roundtrip():
+    """Known encoder start + tail flush: chunked streaming with pinned
+    initial/final state recovers the exact transmitted bits."""
+    rng = np.random.default_rng(5)
+    bits = tail_flush(rng.integers(0, 2, 1022), SPEC)  # 1028 bits
+    llr = (
+        1.0 - 2.0 * conv_encode(bits, SPEC)
+        + rng.normal(0.0, 0.4, (len(bits), SPEC.beta))
+    )
+    dec = ViterbiDecoder(SPEC, decision_depth=256)
+    got = np.asarray(
+        dec.decode_stream_chunked(
+            jnp.asarray(llr, jnp.float32)[None],
+            chunk_len=256,
+            initial_state=0,
+            final_state=0,
+        )
+    )[0]
+    np.testing.assert_array_equal(got, bits)
+
+
+def test_front_door_batch_and_tiled_match_functions():
+    """ViterbiDecoder.decode_batch / .decode_stream_tiled are the same
+    computations as the module-level functions they wrap."""
+    _, llr = _noisy_frame_llrs(4, 96, 0.8, seed=6)
+    dec = ViterbiDecoder(SPEC)
+    np.testing.assert_array_equal(
+        np.asarray(dec.decode_batch(llr, None, None)),
+        np.asarray(decode_frames(llr, SPEC, 2, None, None)),
+    )
+    stream = llr[0]
+    cfg = TiledDecoderConfig()
+    np.testing.assert_array_equal(
+        np.asarray(dec.decode_stream_tiled(stream, cfg)),
+        np.asarray(tiled_decode_stream(stream, SPEC, cfg)),
+    )
+    with pytest.raises(ValueError):
+        dec.decode_stream_tiled(stream, TiledDecoderConfig(rho=1))
+
+
+def test_stream_state_validation():
+    dec = ViterbiDecoder(SPEC, decision_depth=64)
+    state = dec.init_stream_state(2)
+    _, llr = _noisy_frame_llrs(3, 32, 0.5, seed=7)
+    with pytest.raises(ValueError):
+        dec.decode_chunk(state, llr)  # frame-count mismatch
+    with pytest.raises(ValueError):
+        ViterbiDecoder(SPEC, rho=2, decision_depth=63)
+    # final_state pin would land on padded stages when n % rho != 0
+    with pytest.raises(ValueError):
+        dec.decode_stream_chunked(
+            jnp.zeros((1, 33, 2)), chunk_len=16, final_state=0
+        )
+
+
+def test_chunked_remainder_chunk_not_padded():
+    """n not a multiple of chunk_len: the remainder is decoded as a
+    smaller chunk (no zero-LLR padding inside the stream), matching the
+    one-shot decode exactly."""
+    _, llr = _noisy_frame_llrs(2, 1000, 0.6, seed=9)  # 1000 % 256 != 0
+    full = np.asarray(decode_frames(llr, SPEC, 2, None, None))
+    got = np.asarray(
+        ViterbiDecoder(SPEC, decision_depth=256).decode_stream_chunked(
+            llr, chunk_len=256, initial_state=None
+        )
+    )
+    np.testing.assert_array_equal(got, full)
+
+
+def test_sharded_decode_matches_single_device():
+    """shard_map decode over 8 host-platform devices == single device,
+    exactly, for both the frame shape and the serving stream shape
+    (including a frame count that does not divide the device count)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    code = r"""
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8, jax.devices()
+from repro.core import CODE_K7_CCSDS, TiledDecoderConfig, ViterbiDecoder, decode_frames, tiled_decode_stream
+from repro.distributed.decoder import sharded_decode_frames, sharded_decode_streams
+
+rng = np.random.default_rng(8)
+llr = jnp.asarray(rng.normal(0, 1, (13, 96, 2)), jnp.float32)  # 13 % 8 != 0
+ref = np.asarray(decode_frames(llr, CODE_K7_CCSDS, 2, None, None))
+got = np.asarray(sharded_decode_frames(llr, CODE_K7_CCSDS, initial_state=None))
+np.testing.assert_array_equal(ref, got)
+# the ViterbiDecoder front door routes to the same path
+got2 = np.asarray(ViterbiDecoder(CODE_K7_CCSDS).decode_sharded(llr, initial_state=None))
+np.testing.assert_array_equal(ref, got2)
+
+sl = jnp.asarray(rng.normal(0, 1, (5, 512, 2)), jnp.float32)
+cfg = TiledDecoderConfig()
+ref_s = np.asarray(jax.vmap(lambda x: tiled_decode_stream(x, CODE_K7_CCSDS, cfg))(sl))
+got_s = np.asarray(sharded_decode_streams(sl, CODE_K7_CCSDS, cfg))
+np.testing.assert_array_equal(ref_s, got_s)
+print("OK")
+"""
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+        timeout=520,
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "OK" in r.stdout

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import CODE_K7_CCSDS, CodeSpec, build_acs_tables, decode_frames
 from repro.core.viterbi import AcsPrecision, blocks_from_llrs, init_metric

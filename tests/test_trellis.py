@@ -1,7 +1,7 @@
 """Structure tests: paper Theorems 1-7, Fig. 10/11 reproduction."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     CODE_K7_CCSDS,
