@@ -4,8 +4,9 @@ serving-scenario matrix of the unified decoder front door.
 Reproduces: paper Table I (precision sweep {C, channel} x {single, half},
 reported in Gb/s on a V100) — here {carry, channel} x {f32, bf16} on the
 tensor-ACS forward — and extends it with one row per decode scenario
-(tiled / chunked-streaming / sharded / batch, DESIGN.md §6) so all four
-serving paths are benchmarked from one front door.  Invocation:
+(tiled / chunked-streaming / sharded / batch, DESIGN.md §6) and one row
+per deployed standard (the code×rate grid, DESIGN.md §7: punctured
+802.11a/DVB-S rates, LTE tail-biting WAVA, GSM).  Invocation:
 
     PYTHONPATH=src python -m benchmarks.bench_throughput
     PYTHONPATH=src python -m benchmarks.run --only throughput
@@ -90,6 +91,55 @@ def bench_modes(
     return rows
 
 
+def bench_standards(
+    n_frames: int = 64, n_bits: int = 1024, iters: int = 3,
+    grid=None, use_kernel: bool = False,
+):
+    """The code×rate grid (DESIGN.md §7): one row per deployed standard,
+    decode_batch through ``ViterbiDecoder.from_standard`` — punctured
+    rates decode the serial kept-LLR stream, tail-biting rows run the
+    full WAVA circulations.  Mb/s counts MESSAGE bits."""
+    import zlib
+
+    import numpy as np
+
+    from repro.codes import (
+        REGISTRY, encode_standard, standard_llrs, tx_frames,
+    )
+
+    grid = grid or sorted(REGISTRY)
+    rows = []
+    for name in grid:
+        code = REGISTRY[name]
+        decoder = ViterbiDecoder.from_standard(name, use_kernel=use_kernel)
+        # crc32, not hash(): stable across processes (PYTHONHASHSEED)
+        key = jax.random.PRNGKey(zlib.crc32(name.encode()))
+        kb, kn = jax.random.split(key)
+        n = n_bits - (n_bits % decoder.rho)
+        bits = jax.random.bernoulli(kb, 0.5, (n_frames, n)).astype(jnp.int32)
+        llrs = standard_llrs(
+            kn, encode_standard(tx_frames(bits, code, decoder.rho), code),
+            6.0, code,
+        )
+
+        fn = jax.jit(lambda x, d=decoder: d.decode_batch(x))
+        out = fn(llrs)
+        out.block_until_ready()  # compile
+        err = float((np.asarray(out)[:, :n] != np.asarray(bits)).mean())
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(llrs).block_until_ready()
+        dt = (time.perf_counter() - t0) / iters
+        mbps = n_frames * n / dt / 1e6
+        term = "tb" if code.termination == "tailbiting" else "zt"
+        rows.append((
+            f"std/{name}",
+            dt * 1e6,
+            f"{mbps:.1f}Mb/s-cpu;r={code.rate:.2f};{term};ber6dB={err:.1e}",
+        ))
+    return rows
+
+
 def bench(n_frames: int = 2048, n_stages: int = 128, iters: int = 5):
     """Returns list of (name, us_per_call, derived) rows."""
     spec = CODE_K7_CCSDS
@@ -124,5 +174,5 @@ def bench(n_frames: int = 2048, n_stages: int = 128, iters: int = 5):
 
 
 if __name__ == "__main__":
-    for r in bench():
+    for r in bench() + bench_standards():
         print(",".join(str(x) for x in r))

@@ -54,8 +54,10 @@ def main():
     if args.arch == "viterbi-k7":
         from repro.configs import viterbi_k7 as vit
 
-        vcfg = dataclasses.replace(vit.CONFIG, **overrides)
         cell = vit.VITERBI_CELLS[args.cell]
+        vcfg = dataclasses.replace(
+            vit.config_for_standard(cell.code), **overrides
+        )
         mf = dryrun.viterbi_model_flops(vcfg, cell)
         with mesh:
             compiled = dryrun._lower_viterbi_cell(vcfg, cell, mesh).compile()

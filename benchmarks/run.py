@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV:
   * bench_throughput — Table I (precision combos, decode throughput)
                        + serving-mode matrix (tiled/chunked/sharded/batch)
   * bench_ber        — Fig. 13 (BER vs Eb/N0 per precision, + hard/soft)
+  * standards        — the code×rate grid (DESIGN.md §7): throughput +
+                       BER rows for every registry standard (punctured
+                       802.11a/DVB-S rates, LTE tail-biting WAVA, GSM)
   * bench_radix      — §V/§VIII-C (radix-2 vs radix-4 Q counts & timing)
   * bench_kernel     — Pallas ACS kernel vs oracle + survivor packing
   * roofline_report  — §Roofline summary from the dry-run artifacts
@@ -38,6 +41,13 @@ def main() -> None:
         "ber": lambda: bench_ber.bench(
             ebn0_dbs=(3.0, 4.0) if args.fast else (2.0, 3.0, 4.0),
             n_bits=50_000 if args.fast else 400_000,
+        ),
+        "standards": lambda: bench_throughput.bench_standards(
+            n_frames=8 if args.fast else 64,
+            n_bits=256 if args.fast else 1024,
+        ) + bench_ber.bench_standards(
+            ebn0_dbs=(6.0,) if args.fast else (4.0, 6.0),
+            n_bits=4_000 if args.fast else 40_000,
         ),
         "radix": lambda: bench_radix.bench(
             n_frames=256 if args.fast else 1024,

@@ -1,5 +1,7 @@
 """Fig. 13 reproduction: BER curves across precision combinations +
-hard-decision, printed as an ASCII table/plot.
+hard-decision, printed as an ASCII table/plot.  Decodes run through the
+unified ``ViterbiDecoder`` front door (DESIGN.md §6) — one decoder per
+precision combo, tables built once per curve.
 
     PYTHONPATH=src python examples/ber_curve.py [--bits 200000]
 """
@@ -7,7 +9,12 @@ import argparse
 
 import jax.numpy as jnp
 
-from repro.core import CODE_K7_CCSDS, AcsPrecision, TiledDecoderConfig
+from repro.core import (
+    CODE_K7_CCSDS,
+    AcsPrecision,
+    TiledDecoderConfig,
+    ViterbiDecoder,
+)
 from repro.core.ber import ber_curve, uncoded_ber_theory
 
 
@@ -33,8 +40,11 @@ def main():
           + " | uncoded(theory)")
     results = {}
     for name, prec, hard in combos:
-        pts = ber_curve(spec, args.ebn0, args.bits, cfg=cfg,
-                        precision=prec, hard=hard)
+        dec = ViterbiDecoder(spec, precision=prec)
+        pts = ber_curve(
+            spec, args.ebn0, args.bits, cfg=cfg, precision=prec, hard=hard,
+            decoder=lambda llrs, d=dec: d.decode_stream_tiled(llrs, cfg),
+        )
         results[name] = pts
     for i, e in enumerate(args.ebn0):
         row = [f"{e:>10.1f}"]

@@ -4,14 +4,17 @@ accounting — the paper's serving workload (§IX) through the unified
 
     PYTHONPATH=src python examples/serve_viterbi.py [--streams 16]
         [--stream-len 8192] [--batches 5] [--ebn0 4.0]
-        [--mode tiled|chunked|sharded|batch]
+        [--mode tiled|chunked|sharded|batch] [--code wifi-11a-r34]
 
 Modes: ``tiled`` (default) is the paper's §III overlapping-window decode;
 ``chunked`` is stateful streaming (survivor ring buffer carried across
 chunks — zero redundant ACS work); ``sharded`` spreads streams over every
 visible device (demo on CPU with
 XLA_FLAGS=--xla_force_host_platform_device_count=8); ``batch`` decodes
-each stream as one truncated-Viterbi frame.
+each stream as one truncated-Viterbi frame.  ``--code`` serves any
+registry standard (DESIGN.md §7): punctured rates feed the serial
+kept-LLR stream, tail-biting codes (lte-tbcc) decode whole frames via
+WAVA (forces --mode batch).
 """
 import argparse
 import time
@@ -19,7 +22,8 @@ import time
 import jax
 import numpy as np
 
-from repro.configs.viterbi_k7 import CONFIG as VCFG
+from repro.codes import get_code, list_codes
+from repro.configs.viterbi_k7 import config_for_standard
 from repro.data.pipeline import ChannelStream
 from repro.serve.step import make_viterbi_decoder, make_viterbi_serve_step
 
@@ -32,20 +36,25 @@ def main():
     ap.add_argument("--ebn0", type=float, default=4.0)
     ap.add_argument("--mode", default="tiled",
                     choices=["tiled", "chunked", "sharded", "batch"])
+    ap.add_argument("--code", default="ccsds-k7", choices=list_codes())
     ap.add_argument("--chunk-len", type=int, default=2048)
     ap.add_argument("--decision-depth", type=int, default=2048)
     args = ap.parse_args()
 
     import dataclasses
 
+    if get_code(args.code).termination == "tailbiting":
+        args.mode = "batch"  # WAVA decodes frames whole
     vcfg = dataclasses.replace(
-        VCFG, stream_len=args.stream_len, batch_streams=args.streams
+        config_for_standard(args.code),
+        stream_len=args.stream_len, batch_streams=args.streams,
     )
     src = ChannelStream(
         spec=vcfg.spec,
         n_streams=args.streams,
         stream_len=args.stream_len,
         ebn0_db=args.ebn0,
+        code=args.code,
     )
 
     if args.mode in ("tiled", "batch"):
@@ -62,11 +71,13 @@ def main():
     else:  # sharded
         from repro.distributed.decoder import sharded_decode_streams
 
+        decoder = make_viterbi_decoder(vcfg)
+
         def run(llrs):
             return sharded_decode_streams(
-                llrs,
+                decoder.depunctured(llrs),
                 vcfg.spec,
-                cfg=vcfg.tiled,
+                cfg=decoder.default_tiled_config(vcfg.tiled),
                 precision=vcfg.precision,
                 pack_survivors=vcfg.pack_survivors,
             )

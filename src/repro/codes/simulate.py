@@ -1,0 +1,105 @@
+"""End-to-end standard-code pipeline (paper Fig. 12 generalized,
+DESIGN.md §7): bits -> encode (zero-tail or tail-biting) -> puncture ->
+BPSK + AWGN -> LLR -> depuncture-aware ViterbiDecoder decode -> BER.
+
+Used by benchmarks/bench_ber.py's code×rate grid, the CI smoke job and
+tests/test_codes.py.  Eb/N0 is calibrated against the EFFECTIVE rate
+(puncturing raises the rate, so fewer coded bits share the same
+information energy).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+from repro.core.ber import BerPoint
+from repro.core.encoder import conv_encode_jax
+
+from .puncture import puncture
+from .registry import StandardCode, get_code
+
+__all__ = [
+    "tx_frames",
+    "encode_standard",
+    "standard_llrs",
+    "measure_standard_ber",
+]
+
+
+def tx_frames(bits: jnp.ndarray, code: StandardCode, rho: int = 2):
+    """Message bits -> transmit bits: zero-terminated codes get the k-1
+    zero flush tail, rounded up to a rho multiple so a final-state pin
+    stays legal; tail-biting frames transmit as-is (no tail).  The ONE
+    place this bookkeeping lives — examples, benchmarks, smoke and tests
+    all call it."""
+    bits = jnp.asarray(bits, jnp.int32)
+    if code.termination != "zero":
+        return bits
+    tail_len = code.spec.k - 1
+    tail_len += (-(bits.shape[-1] + tail_len)) % rho
+    pad = jnp.zeros(bits.shape[:-1] + (tail_len,), jnp.int32)
+    return jnp.concatenate([bits, pad], axis=-1)
+
+
+def encode_standard(bits: jnp.ndarray, code: StandardCode) -> jnp.ndarray:
+    """(..., n) message bits -> transmitted coded bits.
+
+    Zero-terminated codes assume the tail is already part of ``bits``
+    (use ``encoder.tail_flush``); tail-biting codes need no tail.
+    Returns (..., n, beta) without puncturing, (..., Lp) with.
+    """
+    coded = conv_encode_jax(
+        bits, code.spec, tail_bite=(code.termination == "tailbiting")
+    )
+    if code.puncture is None:
+        return coded
+    return puncture(coded, code.puncture)
+
+
+def standard_llrs(
+    key: jax.Array, coded: jnp.ndarray, ebn0_db: float, code: StandardCode
+) -> jnp.ndarray:
+    """BPSK + AWGN + LLR formation at the code's EFFECTIVE rate."""
+    rx = ch.awgn(key, ch.bpsk(coded), ebn0_db, code.rate)
+    return ch.llr(rx, ebn0_db, code.rate)
+
+
+def measure_standard_ber(
+    code_or_name,
+    ebn0_db: float,
+    n_bits: int,
+    key: jax.Array,
+    n_frames: int = 16,
+    use_kernel: bool = False,
+    decoder: Optional[object] = None,
+) -> Tuple[BerPoint, object]:
+    """One BER point of the code×rate grid: ``n_frames`` frames of
+    ``n_bits`` message bits each, decoded through the ViterbiDecoder
+    front door.  Returns (BerPoint, decoder) so sweeps reuse the tables.
+    """
+    from repro.core.decoder import ViterbiDecoder
+
+    code = code_or_name if isinstance(code_or_name, StandardCode) else (
+        get_code(code_or_name)
+    )
+    if decoder is None:
+        decoder = ViterbiDecoder.from_standard(code.name, use_kernel=use_kernel)
+    kb, kn = jax.random.split(key)
+    bits = jax.random.bernoulli(
+        kb, 0.5, (n_frames, n_bits)
+    ).astype(jnp.int32)
+    tx = tx_frames(bits, code, rho=decoder.rho)
+    coded = encode_standard(tx, code)
+    llrs = standard_llrs(kn, coded, ebn0_db, code)
+    if code.termination == "zero":
+        decoded = decoder.decode_batch(llrs, initial_state=0, final_state=0)
+    else:
+        decoded = decoder.decode_batch(llrs)
+    n_err = int(jnp.sum(decoded[:, :n_bits] != bits))
+    return (
+        BerPoint(ebn0_db=ebn0_db, n_bits=n_frames * n_bits, n_errors=n_err),
+        decoder,
+    )

@@ -18,6 +18,9 @@ class ViterbiConfig:
     name: str = "viterbi-k7"
     family: str = "viterbi"
     spec: CodeSpec = CODE_K7_CCSDS
+    # registry standard this config serves (repro.codes.registry); the
+    # decoder front door inherits its puncture pattern and termination
+    code: str = "ccsds-k7"
     rho: int = 2
     frame_len: int = 64
     overlap: int = 32
@@ -63,27 +66,60 @@ CONFIG_OPTIMIZED = ViterbiConfig(
 )
 
 
+def config_for_standard(name: str, **overrides) -> ViterbiConfig:
+    """A ViterbiConfig serving one registry standard (DESIGN.md §7):
+    spec, puncture and termination all follow the registry entry."""
+    from repro.codes.registry import get_code
+
+    code = get_code(name)
+    kw = dict(name=f"viterbi-{name}", spec=code.spec, code=name)
+    kw.update(overrides)
+    return ViterbiConfig(**kw)
+
+
 @dataclasses.dataclass(frozen=True)
 class ViterbiCell:
     name: str
     stream_len: int
     batch_streams: int
     kind: str = "decode"
+    code: str = "ccsds-k7"  # registry standard the cell serves
 
 
-# the paper's workload cells: short LTE-like blocks up to DVB-like streams
+# the paper's workload cells: short LTE-like blocks up to DVB-like
+# streams, plus one cell per deployed standard (code×rate grid)
 VITERBI_CELLS = {
     "decode_64k": ViterbiCell("decode_64k", 1 << 16, 512),
     "decode_1m": ViterbiCell("decode_1m", 1 << 20, 32),
+    # punctured streams: stream_len is the KEPT (serial) LLR count
+    "decode_64k_wifi_r34": ViterbiCell(
+        "decode_64k_wifi_r34", 1 << 16, 512, code="wifi-11a-r34"
+    ),
+    "decode_64k_dvb_r78": ViterbiCell(
+        "decode_64k_dvb_r78", 1 << 16, 512, code="dvb-s-r78"
+    ),
+    # tail-biting control blocks are short; batch is correspondingly deep
+    "decode_tbcc_blocks": ViterbiCell(
+        "decode_tbcc_blocks", 128, 8192, code="lte-tbcc"
+    ),
+    "decode_gsm_bursts": ViterbiCell(
+        "decode_gsm_bursts", 456, 4096, code="gsm-cs1"
+    ),
 }
 
 
 def input_specs(cfg: ViterbiConfig, cell: ViterbiCell):
-    return {
-        "llrs": jax.ShapeDtypeStruct(
-            (cell.batch_streams, cell.stream_len, cfg.spec.beta), jnp.float32
-        )
-    }
+    """Serving-shape ShapeDtypeStructs for a cell.  Punctured cells feed
+    the SERIAL kept-LLR stream (batch, Lp); unpunctured cells the shaped
+    (batch, n, beta) LLRs."""
+    from repro.codes.registry import get_code
+
+    code = get_code(cell.code)
+    if code.puncture is not None:
+        shape = (cell.batch_streams, cell.stream_len)
+    else:
+        shape = (cell.batch_streams, cell.stream_len, code.spec.beta)
+    return {"llrs": jax.ShapeDtypeStruct(shape, jnp.float32)}
 
 
 def smoke_config() -> ViterbiConfig:

@@ -17,11 +17,17 @@ from .viterbi import (  # noqa: F401
     forward_fused,
     tiled_decode_stream,
     traceback,
+    traceback_with_state,
 )
 from .decoder import (  # noqa: F401
     DEFAULT_DECISION_DEPTH,
     StreamState,
     ViterbiDecoder,
 )
-from .encoder import conv_encode, conv_encode_jax, tail_flush  # noqa: F401
+from .encoder import (  # noqa: F401
+    conv_encode,
+    conv_encode_jax,
+    tail_bite_state,
+    tail_flush,
+)
 from .viterbi_ref import viterbi_decode_ref  # noqa: F401

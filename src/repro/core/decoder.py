@@ -147,10 +147,18 @@ class ViterbiDecoder:
         use_kernel: bool = False,
         pack_survivors: bool = False,
         decision_depth: int = DEFAULT_DECISION_DEPTH,
+        puncture=None,  # codes.PuncturePattern | None
+        termination: str = "zero",
     ):
         if decision_depth % rho:
             raise ValueError(
                 f"decision_depth={decision_depth} not divisible by rho={rho}"
+            )
+        if termination not in ("zero", "tailbiting"):
+            raise ValueError(f"unknown termination {termination!r}")
+        if puncture is not None and puncture.beta != spec.beta:
+            raise ValueError(
+                f"puncture beta={puncture.beta} != code beta={spec.beta}"
             )
         self.spec = spec
         self.rho = rho
@@ -158,7 +166,46 @@ class ViterbiDecoder:
         self.precision = precision or AcsPrecision()
         self.use_kernel = use_kernel
         self.pack_survivors = pack_survivors
+        self.puncture = puncture
+        self.termination = termination
+        if puncture is not None:
+            # erasure-aware depth accounting (DESIGN.md §7): punctured
+            # stages carry fewer real LLRs, so survivor merge takes
+            # ~expansion× more stages; stretch the decision delay to
+            # keep the same information horizon, rounded to a rho grid.
+            decision_depth = int(
+                -(-int(decision_depth * puncture.expansion) // rho) * rho
+            )
         self.decision_depth = decision_depth
+
+    @classmethod
+    def from_standard(
+        cls,
+        name: str,
+        rho: int = 2,
+        precision: Optional[AcsPrecision] = None,
+        use_kernel: bool = False,
+        pack_survivors: bool = False,
+        decision_depth: int = DEFAULT_DECISION_DEPTH,
+    ) -> "ViterbiDecoder":
+        """One front door for every deployed standard (DESIGN.md §7):
+        resolves a ``repro.codes.registry`` entry — mother code, puncture
+        pattern and termination — into a ready decoder, e.g.
+        ``ViterbiDecoder.from_standard("wifi-11a-r34")`` or
+        ``ViterbiDecoder.from_standard("lte-tbcc")``."""
+        from repro.codes.registry import get_code
+
+        code = get_code(name)
+        return cls(
+            spec=code.spec,
+            rho=rho,
+            precision=precision,
+            use_kernel=use_kernel,
+            pack_survivors=pack_survivors,
+            decision_depth=decision_depth,
+            puncture=code.puncture,
+            termination=code.termination,
+        )
 
     @classmethod
     def from_config(
@@ -169,7 +216,21 @@ class ViterbiDecoder:
         decision_depth: Optional[int] = None,
     ) -> "ViterbiDecoder":
         """Build from a configs.viterbi_k7.ViterbiConfig (the single
-        vcfg -> decoder mapping; serve/step.py delegates here)."""
+        vcfg -> decoder mapping; serve/step.py delegates here).  A config
+        naming a registry standard (``vcfg.code``) inherits its puncture
+        pattern and termination."""
+        puncture, termination = None, "zero"
+        code_name = getattr(vcfg, "code", None)
+        if code_name:
+            from repro.codes.registry import get_code
+
+            code = get_code(code_name)
+            if code.spec != vcfg.spec:
+                raise ValueError(
+                    f"config spec {vcfg.spec} != standard {code_name} "
+                    f"spec {code.spec}"
+                )
+            puncture, termination = code.puncture, code.termination
         return cls(
             spec=vcfg.spec,
             rho=vcfg.rho,
@@ -177,7 +238,27 @@ class ViterbiDecoder:
             use_kernel=use_kernel,
             pack_survivors=getattr(vcfg, "pack_survivors", False),
             decision_depth=decision_depth or DEFAULT_DECISION_DEPTH,
+            puncture=puncture,
+            termination=termination,
         )
+
+    # -- rate matching ----------------------------------------------------
+
+    def depunctured(self, llrs: jnp.ndarray, stream: bool = False):
+        """Re-insert zero-LLR erasures when this decoder is punctured.
+
+        Punctured inputs are the SERIAL kept-LLR stream: (F, Lp) for
+        batch entry points, (Lp,) for single-stream ones.  Already
+        depunctured (..., n, beta) inputs pass through unchanged, so
+        upstream stages may depuncture once themselves.
+        """
+        llrs = jnp.asarray(llrs)
+        shaped_ndim = 2 if stream else 3
+        if self.puncture is None or llrs.ndim == shaped_ndim:
+            return llrs
+        from repro.codes.puncture import depuncture
+
+        return depuncture(llrs, self.puncture)
 
     # -- batch ------------------------------------------------------------
 
@@ -186,9 +267,33 @@ class ViterbiDecoder:
         llrs: jnp.ndarray,
         initial_state: Optional[int] = 0,
         final_state: Optional[int] = None,
+        termination: Optional[str] = None,
     ) -> jnp.ndarray:
-        """One-shot decode of independent frames.  llrs: (F, n, beta)."""
-        return decode_frames(
+        """One-shot decode of independent frames.
+
+        llrs: (F, n, beta), or the serial punctured stream (F, Lp) when
+        the decoder carries a puncture pattern (DESIGN.md §7).  With
+        ``termination="tailbiting"`` (or a tail-biting standard) the
+        frames decode via the wrap-around algorithm and
+        initial/final_state are ignored (the boundary state is jointly
+        estimated).  n not divisible by rho is zero-LLR padded internally
+        (information-free) unless a final-state pin would land on the
+        padding.
+        """
+        term = termination or self.termination
+        llrs = self.depunctured(llrs)
+        if term == "tailbiting":
+            return self.decode_tailbiting(llrs)[0]
+        F, n, _ = llrs.shape
+        pad = (-n) % self.rho
+        if pad:
+            if final_state is not None:
+                raise ValueError(
+                    f"final_state requires n divisible by rho={self.rho}; "
+                    f"got n={n} (the pin would land on padded stages)"
+                )
+            llrs = jnp.pad(llrs, ((0, 0), (0, pad), (0, 0)))
+        out = decode_frames(
             llrs,
             self.spec,
             rho=self.rho,
@@ -198,16 +303,72 @@ class ViterbiDecoder:
             use_kernel=self.use_kernel,
             pack_survivors=self.pack_survivors,
         )
+        return out[:, :n] if pad else out
+
+    def decode_tailbiting(
+        self, llrs: jnp.ndarray, max_iters: Optional[int] = None
+    ):
+        """Wrap-around (WAVA) decode of tail-biting frames (DESIGN.md §7).
+
+        llrs as in ``decode_batch``.  Returns (bits (F, n), converged
+        (F,) bool).  Frame lengths not divisible by rho fall back to
+        radix-2 tables — the circular trellis cannot be padded.
+        """
+        from repro.codes.tailbiting import DEFAULT_WAVA_ITERS, wava_decode
+
+        llrs = self.depunctured(llrs)
+        n = llrs.shape[1]
+        tables = (
+            self.tables if n % self.rho == 0
+            else build_acs_tables(self.spec, 1)
+        )
+        return wava_decode(
+            llrs,
+            tables,
+            precision=self.precision,
+            use_kernel=self.use_kernel,
+            pack_survivors=self.pack_survivors,
+            max_iters=max_iters or DEFAULT_WAVA_ITERS,
+        )
 
     # -- tiled stream (stateless, latency-optimal) ------------------------
+
+    def default_tiled_config(
+        self, base: Optional[TiledDecoderConfig] = None
+    ) -> TiledDecoderConfig:
+        """The tiling this decoder would pick by itself: ``base`` (or the
+        library default), with the overlap stretched by the puncture
+        expansion (erasure-aware accounting, DESIGN.md §7) and kept on
+        the rho grid."""
+        base = base or TiledDecoderConfig(rho=self.rho)
+        if self.puncture is None:
+            return base
+        v = int(base.overlap * self.puncture.expansion)
+        v += (-v) % self.rho  # keep the window on the rho grid
+        return TiledDecoderConfig(
+            frame_len=base.frame_len, overlap=v, rho=self.rho
+        )
 
     def decode_stream_tiled(
         self,
         llrs: jnp.ndarray,
         cfg: Optional[TiledDecoderConfig] = None,
     ) -> jnp.ndarray:
-        """Overlapping-window decode of one (n, beta) stream (paper §III)."""
-        cfg = cfg or TiledDecoderConfig(rho=self.rho)
+        """Overlapping-window decode of one stream (paper §III): (n, beta),
+        or the serial punctured (Lp,) stream for a punctured decoder.
+
+        When no cfg is given, a punctured decoder stretches the default
+        overlap by the puncture expansion (erasure-aware accounting,
+        DESIGN.md §7): depunctured stages carry fewer real LLRs, so the
+        same survivor-merge confidence needs proportionally more stages.
+        """
+        if self.termination == "tailbiting":
+            raise ValueError(
+                "tiled stream decode assumes an open (non-circular) "
+                "trellis; use decode_batch/decode_tailbiting per frame"
+            )
+        llrs = self.depunctured(llrs, stream=True)
+        cfg = cfg or self.default_tiled_config()
         if cfg.rho != self.rho:
             raise ValueError(f"cfg.rho={cfg.rho} != decoder rho={self.rho}")
         return tiled_decode_stream(
@@ -307,7 +468,19 @@ class ViterbiDecoder:
         pins the traceback at the true last stage, so it is rejected
         when that stage would sit before padding (n not a multiple of
         rho) — pad or tail-flush the stream to a rho multiple first.
+
+        A punctured decoder also accepts the serial kept-LLR streams
+        (F, Lp): erasures are re-inserted up front — the decision depth
+        was already stretched by the puncture expansion at construction
+        (erasure-aware accounting, DESIGN.md §7) — and the depunctured
+        stages flow through the unchanged chunk machinery.
         """
+        if self.termination == "tailbiting":
+            raise ValueError(
+                "chunked streaming assumes an open trellis; tail-biting "
+                "frames decode whole via decode_batch/decode_tailbiting"
+            )
+        llrs = self.depunctured(llrs)
         F, n, beta = llrs.shape
         c = chunk_len - (chunk_len % self.rho) or self.rho
         pad = (-n) % self.rho
@@ -339,11 +512,18 @@ class ViterbiDecoder:
         final_state: Optional[int] = None,
     ) -> jnp.ndarray:
         """decode_batch with the frame axis sharded over devices
-        (DESIGN.md §6; repro.distributed.decoder)."""
+        (DESIGN.md §6; repro.distributed.decoder).  Punctured serial
+        inputs are depunctured host-side first (the erasure-filled frames
+        shard like any others); tail-biting is not yet sharded."""
         from repro.distributed.decoder import sharded_decode_frames
 
+        if self.termination == "tailbiting":
+            raise NotImplementedError(
+                "sharded tail-biting decode not implemented; shard "
+                "frames manually over decode_tailbiting"
+            )
         return sharded_decode_frames(
-            llrs,
+            self.depunctured(llrs),
             self.spec,
             rho=self.rho,
             mesh=mesh,

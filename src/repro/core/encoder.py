@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from .trellis import CodeSpec, build_transitions
 
-__all__ = ["conv_encode", "conv_encode_jax", "tail_flush"]
+__all__ = ["conv_encode", "conv_encode_jax", "tail_flush", "tail_bite_state"]
 
 
 def tail_flush(bits: np.ndarray, spec: CodeSpec) -> np.ndarray:
@@ -21,32 +21,71 @@ def tail_flush(bits: np.ndarray, spec: CodeSpec) -> np.ndarray:
     return np.concatenate([np.asarray(bits), np.zeros(spec.k - 1, dtype=np.int64)])
 
 
-def conv_encode(bits, spec: CodeSpec, initial_state: int = 0) -> np.ndarray:
-    """Encode a bit vector. Returns (n, beta) array of 0/1 output bits."""
+def tail_bite_state(bits, k: int) -> int:
+    """Tail-biting boundary state: the last k-1 message bits, most recent
+    at the MSB (trellis.py state convention).  The encoder starts AND
+    ends here; the WAVA consistency probe (codes/tailbiting.py) tests
+    against the same value."""
+    bits = np.asarray(bits)
+    if bits.shape[0] < k - 1:
+        raise ValueError(
+            f"tail-biting needs >= k-1={k - 1} bits, got {bits.shape[0]}"
+        )
+    s = 0
+    for i in range(k - 1):
+        s |= int(bits[-1 - i]) << (k - 2 - i)
+    return s
+
+
+def conv_encode(
+    bits, spec: CodeSpec, initial_state: int = 0, tail_bite: bool = False
+) -> np.ndarray:
+    """Encode a bit vector. Returns (n, beta) array of 0/1 output bits.
+
+    ``tail_bite=True`` initializes the register with the LAST k-1 message
+    bits (DESIGN.md §7), so the FSM ends in its starting state and no
+    tail bits are transmitted (LTE TBCC termination).
+    """
     tr = build_transitions(spec)
     bits = np.asarray(bits, dtype=np.int64)
+    s = tail_bite_state(bits, spec.k) if tail_bite else initial_state
     out = np.zeros((bits.shape[0], spec.beta), dtype=np.int64)
-    s = initial_state
     for t, u in enumerate(bits):
         out[t] = tr.out_bits[s, u]
         s = int(tr.next_state[s, u])
     return out
 
 
-def conv_encode_jax(bits: jnp.ndarray, spec: CodeSpec, initial_state: int = 0):
+def conv_encode_jax(
+    bits: jnp.ndarray,
+    spec: CodeSpec,
+    initial_state: int = 0,
+    tail_bite: bool = False,
+):
     """JAX encoder: bits (..., n) int32 -> (..., n, beta) int32.
 
-    Batched over leading dims via vmap-compatible scan.
+    Batched over leading dims via vmap-compatible scan.  With
+    ``tail_bite`` the per-sequence initial state is derived from the last
+    k-1 bits (so the trellis is circular; see ``conv_encode``).
     """
     tr = build_transitions(spec)
     next_state = jnp.asarray(tr.next_state, dtype=jnp.int32)
     out_bits = jnp.asarray(tr.out_bits, dtype=jnp.int32)
 
     def encode_one(seq):
+        if tail_bite:
+            # s0 bit (k-2-i) = seq[n-1-i]  <=>  s0 = sum_j seq[n-k+1+j]<<j
+            tail = jax.lax.dynamic_slice_in_dim(
+                seq, seq.shape[0] - (spec.k - 1), spec.k - 1
+            )
+            s0 = jnp.sum(tail << jnp.arange(spec.k - 1)).astype(jnp.int32)
+        else:
+            s0 = jnp.int32(initial_state)
+
         def step(s, u):
             return next_state[s, u], out_bits[s, u]
 
-        _, outs = jax.lax.scan(step, jnp.int32(initial_state), seq)
+        _, outs = jax.lax.scan(step, s0, seq)
         return outs
 
     batch_dims = bits.ndim - 1

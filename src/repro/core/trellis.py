@@ -44,10 +44,15 @@ class CodeSpec:
     polys: tuple  # beta generator polynomials, k-bit ints (octal in papers)
 
     def __post_init__(self):
+        # coerce to a hashable tuple of ints: specs key lru_caches and
+        # jit-static args, and rate-1/3+ codes are often written as lists
+        object.__setattr__(self, "polys", tuple(int(g) for g in self.polys))
         if self.k < 2:
             raise ValueError(f"constraint length k must be >= 2, got {self.k}")
         if len(self.polys) < 2:
-            raise ValueError("need beta >= 2 generator polynomials")
+            raise ValueError(
+                f"need beta >= 2 generator polynomials, got {len(self.polys)}"
+            )
         for g in self.polys:
             if not 0 < g < (1 << self.k):
                 raise ValueError(f"polynomial {g:o} (octal) not a {self.k}-bit value")

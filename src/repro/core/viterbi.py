@@ -37,6 +37,7 @@ __all__ = [
     "AcsPrecision",
     "forward_fused",
     "traceback",
+    "traceback_with_state",
     "decode_frames",
     "TiledDecoderConfig",
     "tiled_decode_stream",
@@ -160,18 +161,12 @@ def forward_fused(
     return lam_final.astype(jnp.float32), phis
 
 
-@functools.partial(jax.jit, static_argnames=("tables",))
-def traceback(
+def _traceback_scan(
     phis: jnp.ndarray, final_state: jnp.ndarray, tables: AcsTables
 ):
-    """Vectorized Algorithm 2 over frames, one radix step at a time.
-
-    phis: (T', F, S) int8 slots OR (T', F, S//16) int32 packed (§Perf C2
-    — unpacked lazily per step, never materialized); final_state: (F,).
-    Returns decoded bits (F, T'*rho) int32 — the survivor path's branch
-    inputs, which for this FSM are the top rho bits of each visited state
-    (chronological order = LSB-first of that field, see trellis.py).
-    """
+    """Shared Algorithm-2 scan: returns (start_state (F,), bits (F, T'*rho))
+    where start_state is the survivor path's state BEFORE the first stage
+    in ``phis`` (the tail-biting consistency probe, DESIGN.md §7)."""
     k, rho = tables.spec.k, tables.rho
     mask = (1 << (k - 1 - rho)) - 1
     packed = phis.dtype == jnp.int32
@@ -191,10 +186,38 @@ def traceback(
         pred = ((j & mask) << rho) | slot
         return pred, v
 
-    _, vs = jax.lax.scan(step, final_state.astype(jnp.int32), phis, reverse=True)
+    start, vs = jax.lax.scan(
+        step, final_state.astype(jnp.int32), phis, reverse=True
+    )
     # vs: (T', F) -> bits (F, T'*rho), chronological within each block
     bits = (vs[..., None] >> jnp.arange(rho)) & 1  # (T', F, rho)
-    return jnp.transpose(bits, (1, 0, 2)).reshape(final_state.shape[0], -1)
+    return start, jnp.transpose(bits, (1, 0, 2)).reshape(
+        final_state.shape[0], -1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tables",))
+def traceback(
+    phis: jnp.ndarray, final_state: jnp.ndarray, tables: AcsTables
+):
+    """Vectorized Algorithm 2 over frames, one radix step at a time.
+
+    phis: (T', F, S) int8 slots OR (T', F, S//16) int32 packed (§Perf C2
+    — unpacked lazily per step, never materialized); final_state: (F,).
+    Returns decoded bits (F, T'*rho) int32 — the survivor path's branch
+    inputs, which for this FSM are the top rho bits of each visited state
+    (chronological order = LSB-first of that field, see trellis.py).
+    """
+    return _traceback_scan(phis, final_state, tables)[1]
+
+
+@functools.partial(jax.jit, static_argnames=("tables",))
+def traceback_with_state(
+    phis: jnp.ndarray, final_state: jnp.ndarray, tables: AcsTables
+):
+    """`traceback` that also returns the path's start state (F,) — used by
+    the wrap-around (tail-biting) decoder to test start/end agreement."""
+    return _traceback_scan(phis, final_state, tables)
 
 
 def decode_frames(

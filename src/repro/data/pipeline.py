@@ -73,7 +73,15 @@ class TokenStream:
 
 @dataclasses.dataclass
 class ChannelStream:
-    """Paper Fig. 12 transmitter + channel: yields (bits, llrs) batches."""
+    """Paper Fig. 12 transmitter + channel: yields (bits, llrs) batches.
+
+    ``code`` names a ``repro.codes.registry`` standard (DESIGN.md §7):
+    the stream is then encoded with that code's termination (tail-biting
+    needs no tail), punctured to its rate, and the LLRs come back as the
+    SERIAL kept stream (n_streams, Lp) — exactly what a punctured
+    ``ViterbiDecoder.from_standard`` consumes.  ``code=None`` keeps the
+    legacy (spec, shaped-LLR) behavior.
+    """
 
     spec: CodeSpec = CODE_K7_CCSDS
     n_streams: int = 8
@@ -81,6 +89,7 @@ class ChannelStream:
     ebn0_db: float = 4.0
     seed: int = 0
     host_id: int = 0
+    code: Optional[str] = None
 
     def batch_at(self, step: int):
         key = jax.random.PRNGKey(
@@ -90,6 +99,12 @@ class ChannelStream:
         bits = jax.random.bernoulli(
             kb, 0.5, (self.n_streams, self.stream_len)
         ).astype(jnp.int32)
+        if self.code is not None:
+            from repro.codes import encode_standard, get_code, standard_llrs
+
+            code = get_code(self.code)
+            coded = encode_standard(bits, code)
+            return bits, standard_llrs(kn, coded, self.ebn0_db, code)
         coded = conv_encode_jax(bits, self.spec)
         rx = ch.awgn(kn, ch.bpsk(coded), self.ebn0_db, self.spec.rate)
         llrs = ch.llr(rx, self.ebn0_db, self.spec.rate)

@@ -60,11 +60,28 @@ def model_flops(cfg, cell) -> float:
 
 def viterbi_model_flops(vcfg, cell) -> float:
     """Useful ACS work: per stage per state, 2^rho predecessors x
-    (branch-metric MACs + add + compare)."""
+    (branch-metric MACs + add + compare).  Standard cells (DESIGN.md §7)
+    adjust the stage count for puncturing (stream_len counts KEPT serial
+    LLRs) and for the WAVA circulations of tail-biting cells."""
+    from repro.codes.registry import get_code
+    from repro.codes.tailbiting import DEFAULT_WAVA_ITERS
+
     spec, rho = vcfg.spec, vcfg.rho
     S, R, B = spec.n_states, 1 << rho, rho * spec.beta
-    n_windows = cell.stream_len // vcfg.frame_len
-    stages = n_windows * (vcfg.frame_len + 2 * vcfg.overlap)
+    code = get_code(getattr(cell, "code", "ccsds-k7"))
+    if code.termination == "tailbiting":
+        stages = cell.stream_len * DEFAULT_WAVA_ITERS  # batch WAVA passes
+    else:
+        n = cell.stream_len
+        v = vcfg.overlap
+        if code.puncture is not None:
+            n = code.puncture.stages_for(cell.stream_len)
+            # the lowered program tiles with the erasure-stretched
+            # overlap (ViterbiDecoder.default_tiled_config, DESIGN.md §7)
+            v = int(v * code.puncture.expansion)
+            v += (-v) % rho
+        n_windows = -(-n // vcfg.frame_len)  # tiled_decode_stream ceils
+        stages = n_windows * (vcfg.frame_len + 2 * v)
     steps = stages / rho
     per_step = S * R * (2 * B + 2)
     return cell.batch_streams * steps * per_step
@@ -137,14 +154,22 @@ def _lower_viterbi_cell(vcfg, cell, mesh):
         axes.pop()
     dp = tuple(axes) or None
     specs = vit.input_specs(vcfg, cell)
-    sh = NamedSharding(mesh, P(dp, None, None))
-    step = make_viterbi_serve_step(vcfg)
+    llr_spec = specs["llrs"]
+    # tail-biting blocks decode whole (WAVA batch mode); open-trellis
+    # streams tile.  Punctured cells feed rank-2 serial LLRs.
+    from repro.codes.registry import get_code
+
+    code = get_code(getattr(cell, "code", "ccsds-k7"))
+    mode = "batch" if code.termination == "tailbiting" else "tiled"
+    in_axes = (dp,) + (None,) * (len(llr_spec.shape) - 1)
+    sh = NamedSharding(mesh, P(*in_axes))
+    step = make_viterbi_serve_step(vcfg, mode=mode)
     jitted = jax.jit(
         step,
         in_shardings=(sh,),
         out_shardings=NamedSharding(mesh, P(dp, None)),
     )
-    return jitted.lower(specs["llrs"])
+    return jitted.lower(llr_spec)
 
 
 def run_cell(arch: str, cell_name: str, multi_pod: bool, save: bool = True):
@@ -160,8 +185,8 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, save: bool = True):
     t0 = time.time()
     try:
         if arch == "viterbi-k7":
-            vcfg = vit.CONFIG
             cell = vit.VITERBI_CELLS[cell_name]
+            vcfg = vit.config_for_standard(cell.code)
             mf = viterbi_model_flops(vcfg, cell)
             with mesh:
                 lowered = _lower_viterbi_cell(vcfg, cell, mesh)

@@ -4,6 +4,9 @@ Two services:
   * ``--service viterbi`` — the paper's workload: batched tensor-ACS
     decode of LLR streams through the unified ViterbiDecoder front door
     (DESIGN.md §6; optimized §Perf C4b config via --optimized).
+    ``--code`` picks any registry standard (DESIGN.md §7): punctured
+    rates (wifi-11a-r34, dvb-s-r78, ...) serve the serial kept-LLR
+    stream; tail-biting codes (lte-tbcc) decode whole frames via WAVA.
     ``--mode`` selects the decode scenario:
       - tiled   (default) stateless overlapping-window decode (§III);
       - chunked stateful streaming — path metrics + survivor ring carried
@@ -45,11 +48,16 @@ def _viterbi_run_fn(vcfg, args):
     if args.mode == "sharded":
         from repro.distributed.decoder import sharded_decode_streams
 
+        decoder = make_viterbi_decoder(vcfg)
+
         def run(llrs):
+            # punctured streams: erasures re-inserted host-side, then the
+            # depunctured streams shard like any others (DESIGN.md §7)
+            llrs = decoder.depunctured(llrs)
             return sharded_decode_streams(
                 llrs,
                 vcfg.spec,
-                cfg=vcfg.tiled,
+                cfg=decoder.default_tiled_config(vcfg.tiled),
                 precision=vcfg.precision,
                 pack_survivors=vcfg.pack_survivors,
             )
@@ -61,10 +69,29 @@ def _viterbi_run_fn(vcfg, args):
 def serve_viterbi(args):
     import dataclasses
 
-    from repro.configs.viterbi_k7 import CONFIG, CONFIG_OPTIMIZED
+    from repro.codes.registry import get_code
+    from repro.configs.viterbi_k7 import (
+        CONFIG, CONFIG_OPTIMIZED, config_for_standard,
+    )
     from repro.data.pipeline import ChannelStream
 
-    vcfg = CONFIG_OPTIMIZED if args.optimized else CONFIG
+    if args.code != "ccsds-k7":
+        # any registry standard behind the same front door (DESIGN.md §7)
+        vcfg = config_for_standard(args.code)
+        if args.optimized:
+            # apply exactly CONFIG -> CONFIG_OPTIMIZED's tuning deltas so
+            # a retuned optimized config carries over to every standard
+            vcfg = dataclasses.replace(vcfg, **{
+                f.name: getattr(CONFIG_OPTIMIZED, f.name)
+                for f in dataclasses.fields(CONFIG_OPTIMIZED)
+                if f.name not in ("name", "family", "spec", "code")
+                and getattr(CONFIG_OPTIMIZED, f.name)
+                != getattr(CONFIG, f.name)
+            })
+        if get_code(args.code).termination == "tailbiting":
+            args.mode = "batch"  # WAVA decodes frames whole
+    else:
+        vcfg = CONFIG_OPTIMIZED if args.optimized else CONFIG
     vcfg = dataclasses.replace(
         vcfg, stream_len=args.stream_len, batch_streams=args.streams
     )
@@ -72,6 +99,7 @@ def serve_viterbi(args):
     src = ChannelStream(
         spec=vcfg.spec, n_streams=args.streams,
         stream_len=args.stream_len, ebn0_db=args.ebn0,
+        code=args.code,
     )
     bits, llrs = src.batch_at(0)
     run(llrs).block_until_ready()  # compile
@@ -133,6 +161,12 @@ def main():
     ap.add_argument("--batches", type=int, default=3)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--ebn0", type=float, default=4.0)
+    ap.add_argument(
+        "--code", default="ccsds-k7",
+        help="registry standard to serve (repro.codes.list_codes()): "
+        "e.g. wifi-11a-r34 (punctured) or lte-tbcc (tail-biting; "
+        "forces --mode batch)",
+    )
     ap.add_argument("--optimized", action="store_true")
     ap.add_argument("--mode", default="tiled",
                     choices=["tiled", "chunked", "sharded", "batch"])

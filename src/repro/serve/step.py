@@ -64,20 +64,39 @@ def make_viterbi_serve_step(vcfg, precision=None, use_kernel: bool = False,
     is not a step function — build the decoder with
     ``make_viterbi_decoder`` and drive init_stream_state / decode_chunk /
     flush_stream directly (see launch/serve.py --mode chunked).
+
+    Standard-code configs (vcfg.code, DESIGN.md §7) flow through
+    unchanged: punctured configs serve the SERIAL kept-LLR stream
+    (n_streams, Lp) and the decoder re-inserts erasures (tiled windows
+    use the erasure-stretched default overlap); tail-biting configs must
+    use mode="batch" (WAVA decodes frames whole, and the serve step stays
+    a pure jittable function because WAVA's circulations unroll at trace
+    time).
     """
     decoder = make_viterbi_decoder(vcfg, precision, use_kernel)
 
+    if decoder.termination == "tailbiting" and mode != "batch":
+        raise ValueError(
+            f"tail-biting standard {vcfg.code!r} serves via mode='batch' "
+            f"(WAVA decodes frames whole), got mode={mode!r}"
+        )
     if mode == "tiled":
+        # identity for unpunctured decoders; stretches the configured
+        # overlap by the puncture expansion otherwise (DESIGN.md §7)
+        cfg = decoder.default_tiled_config(vcfg.tiled)
+
         def serve_step(llrs):
-            fn = functools.partial(
-                decoder.decode_stream_tiled, cfg=vcfg.tiled
-            )
+            fn = functools.partial(decoder.decode_stream_tiled, cfg=cfg)
             return jax.vmap(fn)(llrs)
     elif mode == "batch":
-        def serve_step(llrs):
-            return decoder.decode_batch(
-                llrs, initial_state=None, final_state=None
-            )
+        if decoder.termination == "tailbiting":
+            def serve_step(llrs):
+                return decoder.decode_tailbiting(llrs)[0]
+        else:
+            def serve_step(llrs):
+                return decoder.decode_batch(
+                    llrs, initial_state=None, final_state=None
+                )
     else:
         raise ValueError(f"unknown serve mode {mode!r}")
 
