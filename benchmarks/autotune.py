@@ -1,0 +1,215 @@
+"""One-pass kernel autotuner (DESIGN.md §8): sweep the fused decode
+kernel's geometry — block_frames x time_tile x matmul_dtype — per
+serving cell, and record the chosen configs into the ``KERNEL_CONFIGS``
+cells of ``src/repro/configs/viterbi_k7.py``.
+
+    PYTHONPATH=src python -m benchmarks.autotune [--fast] [--apply] \
+        [--cells decode_64k decode_64k_wifi_r34]
+
+``pack_survivors`` is RECORDED, not searched: the §8 ring always
+bit-packs when the state count allows (``ViterbiDecoder.ring_packed``) —
+a 16x smaller VMEM ring for negligible VPU shift work — so sweeping it
+would record a knob the streaming path ignores.  block_frames points
+larger than the tuning workload's frame count are deduplicated (the
+kernel clamps BF to F, so they would time the identical program).
+
+Scoring: measured wall time of the jitted one-pass decode at a shrunken
+cell shape (interpret emulation on CPU — RELATIVE ordering only; on TPU
+the same sweep times the Mosaic lowering), tie-broken by the static
+kernel-interface HBM bytes from ``repro.kernels.traffic``.  Results land
+in ``experiments/autotune/<cell>.json``; ``--apply`` rewrites the
+sentinel-marked block in configs/viterbi_k7.py so the tuned geometry
+ships with the config (``ViterbiDecoder.from_config`` reads it,
+``config_for_cell`` resolves cells through it).
+
+Tail-biting cells are skipped: WAVA needs the full survivor tensor and
+stays on the exact two-pass path.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import pathlib
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+OUT = REPO / "experiments" / "autotune"
+CONFIG_PY = REPO / "src" / "repro" / "configs" / "viterbi_k7.py"
+
+SWEEP = {
+    "block_frames": (128, 256),
+    "time_tile": (16, 32, 64),
+    "matmul_dtype": ("f32", "bf16"),
+}
+
+
+def _tune_cell(cell, n_frames: int, n_stages: int, depth: int, iters: int):
+    """Time every sweep point on a shrunken cell workload; returns rows
+    sorted best-first."""
+    from repro.codes.registry import get_code
+    from repro.core.trellis import build_acs_tables
+    from repro.core.viterbi import (
+        AcsPrecision, blocks_from_llrs, init_metric, pick_time_tile,
+    )
+    from repro.kernels.ops import ring_dtype, ring_words, viterbi_decode_fused
+    from repro.kernels.traffic import one_pass_stream_traffic
+
+    code = get_code(cell.code)
+    spec = code.spec
+    tables = build_acs_tables(spec, 2)
+    key = jax.random.PRNGKey(0)
+    llrs = jax.random.normal(key, (n_frames, n_stages, spec.beta))
+    blocks = blocks_from_llrs(llrs, 2)
+    t_steps = blocks.shape[0]
+    d_steps = depth // 2
+    lam0 = init_metric(n_frames, spec.n_states, None)
+
+    # the ring policy the decoder actually runs (decoder.ring_packed)
+    pack = spec.n_states % 16 == 0
+    rows, seen = [], set()
+    for bf, tt_target, mm in itertools.product(*SWEEP.values()):
+        bf = min(bf, n_frames)  # kernel clamps BF to F: dedupe
+        tt = pick_time_tile(d_steps, t_steps, tt_target)
+        if (bf, tt, mm) in seen:
+            continue
+        seen.add((bf, tt, mm))
+        prec = (
+            AcsPrecision(matmul_dtype=jnp.bfloat16,
+                         channel_dtype=jnp.bfloat16)
+            if mm == "bf16" else AcsPrecision()
+        )
+        hist0 = jnp.zeros(
+            (d_steps, n_frames, ring_words(tables, pack)),
+            ring_dtype(pack),
+        )
+
+        def run():
+            b, lam, h = viterbi_decode_fused(
+                blocks, lam0, hist0, tables, prec,
+                time_tile=tt, block_frames=bf, pack_survivors=pack,
+            )
+            return b.block_until_ready()
+
+        run()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run()
+        dt = (time.perf_counter() - t0) / iters
+        traffic = one_pass_stream_traffic(
+            n_stages=n_stages, n_frames=n_frames, spec=spec,
+            decision_depth=depth, pack_survivors=pack, time_tile=tt,
+            precision=prec,
+        )
+        rows.append({
+            "block_frames": bf,
+            "time_tile": tt,
+            "pack_survivors": pack,
+            "matmul_dtype": mm,
+            "us_per_call": dt * 1e6,
+            "tokens_per_s": n_frames * n_stages / dt,
+            "kernel_bytes": int(traffic.kernel_bytes),
+        })
+    rows.sort(key=lambda r: (r["us_per_call"], r["kernel_bytes"]))
+    return rows
+
+
+def _format_configs(chosen: dict) -> str:
+    lines = ["KERNEL_CONFIGS = {"]
+    lines.append(
+        "    # streaming cells: packed VMEM ring, tuned by "
+        "benchmarks.autotune"
+    )
+    for cell, kc in sorted(chosen.items()):
+        lines.append(
+            f'    "{cell}": KernelConfig('
+            f'{kc["block_frames"]}, {kc["time_tile"]}, '
+            f'{kc["pack_survivors"]}, "{kc["matmul_dtype"]}"),'
+        )
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def apply_to_configs(chosen: dict) -> None:
+    """Rewrite the sentinel-marked KERNEL_CONFIGS block in viterbi_k7.py."""
+    text = CONFIG_PY.read_text()
+    pattern = re.compile(
+        r"(# --- autotune: begin.*?---\n)(.*?)(# --- autotune: end ---)",
+        re.S,
+    )
+    if not pattern.search(text):
+        raise RuntimeError(f"autotune sentinels not found in {CONFIG_PY}")
+    new = pattern.sub(
+        lambda m: m.group(1) + _format_configs(chosen) + "\n" + m.group(3),
+        text,
+    )
+    CONFIG_PY.write_text(new)
+    print(f"[autotune] wrote {len(chosen)} cell configs into {CONFIG_PY}")
+
+
+def main() -> None:
+    from repro.configs import viterbi_k7 as vit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--apply", action="store_true",
+                    help="rewrite KERNEL_CONFIGS in configs/viterbi_k7.py")
+    ap.add_argument("--cells", nargs="*", default=None)
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args()
+
+    cells = {
+        name: cell for name, cell in vit.VITERBI_CELLS.items()
+        if args.cells is None or name in args.cells
+    }
+    # the frame count must cover the largest block_frames point or the
+    # kernel's BF=min(block_frames, F) clamp turns that axis into noise
+    n_frames = max(SWEEP["block_frames"])
+    n_stages = 128 if args.fast else 1024
+    depth = 64 if args.fast else 256
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    chosen = {}
+    for name, cell in cells.items():
+        from repro.codes.registry import get_code
+
+        if get_code(cell.code).termination == "tailbiting":
+            print(f"[autotune] {name}: tail-biting, stays two-pass — skip")
+            continue
+        rows = _tune_cell(cell, n_frames, n_stages, depth, args.iters)
+        best = rows[0]
+        chosen[name] = best
+        artifact = {
+            "cell": name,
+            "code": cell.code,
+            "workload": {
+                "n_frames": n_frames, "n_stages": n_stages, "depth": depth,
+            },
+            "backend": jax.default_backend(),
+            "best": best,
+            "sweep": rows,
+        }
+        path = OUT / f"{name}.json"
+        path.write_text(json.dumps(artifact, indent=2))
+        print(
+            f"[autotune] {name}: best bf={best['block_frames']} "
+            f"tt={best['time_tile']} pack={best['pack_survivors']} "
+            f"mm={best['matmul_dtype']} "
+            f"({best['us_per_call']:.0f}us, {best['kernel_bytes']}B) "
+            f"-> {path.relative_to(REPO)}"
+        )
+    if args.apply and chosen:
+        apply_to_configs({
+            k: {kk: v[kk] for kk in (
+                "block_frames", "time_tile", "pack_survivors", "matmul_dtype"
+            )} for k, v in chosen.items()
+        })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
-"""Pallas kernel sanity bench: interpret-mode kernel vs jnp oracle
-(correctness + relative CPU cost; TPU timing is out of scope here) and
-survivor-packing traffic accounting (the paper's 32-bit compaction).
+"""Pallas kernel sanity bench: interpret-mode kernels vs jnp oracle
+(correctness + relative CPU cost; TPU timing is out of scope here),
+survivor-packing traffic accounting (the paper's 32-bit compaction), and
+the one-pass streaming HBM bytes-accessed report (DESIGN.md §8).
 
 Reproduces: the paper's §VIII kernel-level claims — the Fig. 15 packed
 tensor-op as a TPU Mosaic kernel, and the §VIII output-compaction
@@ -19,8 +20,12 @@ import numpy as np
 
 from repro.core import CODE_K7_CCSDS
 from repro.core.trellis import build_acs_tables
-from repro.core.viterbi import AcsPrecision, blocks_from_llrs, init_metric
-from repro.kernels.ops import viterbi_forward
+from repro.core.viterbi import (
+    AcsPrecision, blocks_from_llrs, init_metric, pick_time_tile,
+)
+from repro.kernels.ops import (
+    ring_dtype, ring_words, viterbi_decode_fused, viterbi_forward,
+)
 from repro.kernels.ref import acs_forward_ref
 
 
@@ -66,6 +71,37 @@ def bench(n_frames: int = 512, n_stages: int = 64, iters: int = 3):
         lambda: viterbi_forward(blocks, lam0, tables)[0].block_until_ready()
     )
     rows.append(("kernel/pallas-interpret", t_int, "cpu-interpret(no-perf)"))
+
+    # one-pass time-tiled decode (DESIGN.md §8): ACS + in-kernel traceback
+    d_steps = min(T, 32)
+    tt = pick_time_tile(d_steps, T)
+    hist0 = jnp.zeros((d_steps, n_frames, ring_words(tables, True)),
+                      ring_dtype(True))
+    t_fused = time_fn(
+        lambda: viterbi_decode_fused(
+            blocks, lam0, hist0, tables, time_tile=tt, pack_survivors=True
+        )[0].block_until_ready()
+    )
+    rows.append(
+        ("kernel/one-pass-fused", t_fused,
+         f"cpu-interpret(no-perf);tile={tt};depth={d_steps * 2}")
+    )
+
+    # HBM bytes accessed, one-pass vs two-pass streaming, at the §8
+    # acceptance shape (static pallas-interface + hlocount accounting)
+    from repro.kernels.traffic import streaming_traffic_report
+
+    rep = streaming_traffic_report()
+    for key in ("two_pass", "two_pass_packed", "one_pass"):
+        rows.append(
+            (f"kernel/hbm-{key}", 0.0,
+             f"bytes={rep[key]['total_bytes']};T=512;F=1024")
+        )
+    rows.append(
+        ("kernel/hbm-ratio", 0.0,
+         f"{rep['ratio']:.1f}x-vs-default;"
+         f"{rep['ratio_vs_packed']:.1f}x-vs-packed")
+    )
     return rows
 
 

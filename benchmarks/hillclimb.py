@@ -55,9 +55,7 @@ def main():
         from repro.configs import viterbi_k7 as vit
 
         cell = vit.VITERBI_CELLS[args.cell]
-        vcfg = dataclasses.replace(
-            vit.config_for_standard(cell.code), **overrides
-        )
+        vcfg = vit.config_for_cell(args.cell, **overrides)
         mf = dryrun.viterbi_model_flops(vcfg, cell)
         with mesh:
             compiled = dryrun._lower_viterbi_cell(vcfg, cell, mesh).compile()

@@ -1,8 +1,11 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only <suite>]
 
-Prints ``name,us_per_call,derived`` CSV:
+Prints ``name,us_per_call,derived`` CSV and, per executed suite, writes a
+``BENCH_<suite>.json`` artifact (scenario -> rows with tokens/s, bytes
+accessed where the suite measures them, and the tuned kernel configs) so
+the perf trajectory is tracked across PRs:
   * bench_throughput — Table I (precision combos, decode throughput)
                        + serving-mode matrix (tiled/chunked/sharded/batch)
   * bench_ber        — Fig. 13 (BER vs Eb/N0 per precision, + hard/soft)
@@ -10,19 +13,77 @@ Prints ``name,us_per_call,derived`` CSV:
                        BER rows for every registry standard (punctured
                        802.11a/DVB-S rates, LTE tail-biting WAVA, GSM)
   * bench_radix      — §V/§VIII-C (radix-2 vs radix-4 Q counts & timing)
-  * bench_kernel     — Pallas ACS kernel vs oracle + survivor packing
+  * bench_kernel     — Pallas ACS kernels vs oracle + survivor packing
+                       + the one-pass HBM bytes-accessed report (§8)
   * roofline_report  — §Roofline summary from the dry-run artifacts
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+import re
 import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+_MBPS = re.compile(r"([0-9.]+)Mb/s")
+_BYTES = re.compile(r"bytes=([0-9]+)")
+
+
+def _artifact_rows(rows):
+    """CSV rows -> JSON rows, lifting tokens/s and bytes out of the
+    derived column where a suite reports them."""
+    out = []
+    for name, us, derived in rows:
+        row = {
+            "name": str(name),
+            "us_per_call": float(us),
+            "derived": str(derived),
+        }
+        m = _MBPS.search(row["derived"])
+        if m:  # decoded message bits per second == tokens/s for a decoder
+            row["tokens_per_s"] = float(m.group(1)) * 1e6
+        m = _BYTES.search(row["derived"])
+        if m:
+            row["bytes_accessed"] = int(m.group(1))
+        out.append(row)
+    return out
+
+
+def _write_artifact(suite: str, rows, fast: bool, out_dir: pathlib.Path):
+    import jax
+
+    from repro.configs import viterbi_k7 as vit
+
+    artifact = {
+        "suite": suite,
+        "fast": fast,
+        "backend": jax.default_backend(),
+        "kernel_configs": {
+            name: {
+                "block_frames": kc.block_frames,
+                "time_tile": kc.time_tile,
+                "pack_survivors": kc.pack_survivors,
+                "matmul_dtype": kc.matmul_dtype,
+            }
+            for name, kc in vit.KERNEL_CONFIGS.items()
+        },
+        "rows": _artifact_rows(rows),
+    }
+    path = out_dir / f"BENCH_{suite}.json"
+    path.write_text(json.dumps(artifact, indent=2))
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller workloads")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--out-dir", default=str(REPO),
+        help="where BENCH_<suite>.json artifacts land (default: repo root)",
+    )
     args = ap.parse_args()
 
     from benchmarks import (
@@ -59,18 +120,26 @@ def main() -> None:
         ),
         "roofline": roofline_report.bench,
     }
+    out_dir = pathlib.Path(args.out_dir)
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(",".join(str(x) for x in row))
                 sys.stdout.flush()
         except Exception as e:  # noqa: BLE001
             failed += 1
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            continue
+        try:  # artifact I/O must not report a green suite as failed
+            path = _write_artifact(name, rows, args.fast, out_dir)
+            print(f"# wrote {path}")
+        except Exception as e:  # noqa: BLE001
+            print(f"# artifact write failed for {name}: {e}")
     if failed:
         raise SystemExit(1)
 

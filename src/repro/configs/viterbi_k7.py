@@ -6,6 +6,7 @@ serve_step = tiled tensor-ACS decode of a batch of LLR streams; dry-run and
 rooflined on the same production meshes as the LM architectures.
 """
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,10 @@ class ViterbiConfig:
     pack_survivors: bool = False  # C2: 16 x 2-bit survivors per int32
     renorm: bool = True  # C3: per-step path-metric renormalization
     split_dot: bool = False  # C5: bf16 branch metrics + f32 metric routing
+    # one-pass kernel geometry (DESIGN.md §8); None = library defaults,
+    # per-cell tuned values live in KERNEL_CONFIGS (benchmarks/autotune.py)
+    time_tile: Optional[int] = None
+    block_frames: Optional[int] = None
 
     @property
     def tiled(self) -> TiledDecoderConfig:
@@ -106,6 +111,73 @@ VITERBI_CELLS = {
         "decode_gsm_bursts", 456, 4096, code="gsm-cs1"
     ),
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One-pass kernel geometry for a serving cell (DESIGN.md §8).
+
+    Produced by ``benchmarks/autotune.py`` (block_frames x time_tile x
+    pack x matmul_dtype sweep); ``apply_kernel_config`` threads it into a
+    ViterbiConfig so ``ViterbiDecoder.from_config`` picks it up.
+    """
+
+    block_frames: int = 256
+    time_tile: int = 32
+    pack_survivors: bool = True
+    matmul_dtype: str = "f32"  # "f32" | "bf16"
+
+    def overrides(self) -> dict:
+        return dict(
+            block_frames=self.block_frames,
+            time_tile=self.time_tile,
+            pack_survivors=self.pack_survivors,
+            channel_bf16=self.matmul_dtype == "bf16",
+        )
+
+
+# --- autotune: begin (written by `python -m benchmarks.autotune --apply`;
+#     do not edit inside this block by hand) ---
+KERNEL_CONFIGS = {
+    # streaming cells: packed VMEM ring, tuned by benchmarks.autotune
+    "decode_1m": KernelConfig(256, 16, True, "bf16"),
+    "decode_64k": KernelConfig(256, 32, True, "bf16"),
+    "decode_64k_dvb_r78": KernelConfig(256, 32, True, "f32"),
+    "decode_64k_wifi_r34": KernelConfig(256, 16, True, "bf16"),
+    "decode_gsm_bursts": KernelConfig(256, 32, True, "f32"),
+}
+# --- autotune: end ---
+
+
+def kernel_config_for(cell_name: str) -> KernelConfig:
+    """Tuned one-pass geometry for a cell (library default otherwise).
+    Tail-biting cells (WAVA needs full survivors) have no entry — they
+    stay on the exact two-pass path."""
+    return KERNEL_CONFIGS.get(cell_name, KernelConfig())
+
+
+def apply_kernel_config(
+    cfg: ViterbiConfig, cell_name: str
+) -> ViterbiConfig:
+    """ViterbiConfig with the cell's tuned kernel geometry applied."""
+    if cell_name not in KERNEL_CONFIGS:
+        return cfg
+    return dataclasses.replace(
+        cfg, **kernel_config_for(cell_name).overrides()
+    )
+
+
+def config_for_cell(cell_name: str, **overrides) -> ViterbiConfig:
+    """Cell name -> ready ViterbiConfig: the cell's registry standard
+    plus its autotuned kernel geometry (KERNEL_CONFIGS) — the chokepoint
+    dryrun and hillclimb resolve cells through, so tuned
+    time_tile/block_frames/pack actually reach the decoder
+    (``ViterbiDecoder.from_config`` reads them).  The serve CLI resolves
+    by CODE name (``config_for_standard``), not by cell; apply a cell's
+    geometry there with ``apply_kernel_config`` when serving one."""
+    cell = VITERBI_CELLS[cell_name]
+    cfg = apply_kernel_config(config_for_standard(cell.code), cell_name)
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
 
 def input_specs(cfg: ViterbiConfig, cell: ViterbiCell):

@@ -50,6 +50,14 @@ from .viterbi import (
     traceback,
 )
 
+from .kernel_geometry import (  # pallas-free §8 geometry rules
+    DEFAULT_BLOCK_FRAMES,
+    one_pass_time_tile,
+    ring_auto_packed,
+    ring_dtype,
+    ring_words,
+)
+
 __all__ = ["StreamState", "ViterbiDecoder", "DEFAULT_DECISION_DEPTH"]
 
 # ~5K stages of decision delay (DESIGN.md §6): survivor merge is certain
@@ -115,6 +123,42 @@ def _chunk_step(
     return full[full.shape[0] - hist.shape[0]:], lam2, out
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tables", "precision", "time_tile", "block_frames", "pack_survivors",
+    ),
+)
+def _chunk_step_fused(
+    hist: jnp.ndarray,
+    lam: jnp.ndarray,
+    blocks: jnp.ndarray,
+    tables: AcsTables,
+    precision: AcsPrecision,
+    time_tile: int,
+    block_frames: int,
+    pack_survivors: bool,
+):
+    """``_chunk_step`` fused into the one-pass kernel (DESIGN.md §8): the
+    survivor window stays in a VMEM ring and the delayed traceback runs
+    inside the kernel, one commit per time tile instead of one per chunk.
+    Same contract: (new_hist, new_lam, bits (F, T*rho)) for the T oldest
+    steps of the window, each committed with >= D steps of lookahead."""
+    from repro.kernels import ops as kernel_ops
+
+    bits, lam2, hist2 = kernel_ops.viterbi_decode_fused(
+        blocks,
+        lam,
+        hist,
+        tables,
+        precision,
+        time_tile=time_tile,
+        block_frames=block_frames,
+        pack_survivors=pack_survivors,
+    )
+    return hist2, lam2, bits.T.astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("tables", "final_state"))
 def _flush_step(
     hist: jnp.ndarray,
@@ -149,6 +193,9 @@ class ViterbiDecoder:
         decision_depth: int = DEFAULT_DECISION_DEPTH,
         puncture=None,  # codes.PuncturePattern | None
         termination: str = "zero",
+        one_pass: Optional[bool] = None,
+        time_tile: Optional[int] = None,
+        block_frames: Optional[int] = None,
     ):
         if decision_depth % rho:
             raise ValueError(
@@ -168,6 +215,22 @@ class ViterbiDecoder:
         self.pack_survivors = pack_survivors
         self.puncture = puncture
         self.termination = termination
+        # one-pass streaming (DESIGN.md §8): default on whenever the
+        # Pallas backend is on — the streaming entry points then keep
+        # survivors in the kernel's VMEM ring instead of round-tripping
+        # the (T, F, S) phi tensor through HBM.  The exact batch and
+        # tail-biting paths always stay two-pass (WAVA needs full phi).
+        self.one_pass = use_kernel if one_pass is None else bool(one_pass)
+        self.time_tile = time_tile
+        self.block_frames = block_frames
+        # the streaming survivor ring is ALWAYS bit-packed when the state
+        # count allows it and one-pass is on (the paper's 32-bit output
+        # compaction is part of the §8 ring design); batch/tail-biting
+        # phi packing stays opt-in via pack_survivors.
+        self.ring_packed = (
+            ring_auto_packed(spec.n_states, pack_survivors)
+            if self.one_pass else pack_survivors
+        )
         if puncture is not None:
             # erasure-aware depth accounting (DESIGN.md §7): punctured
             # stages carry fewer real LLRs, so survivor merge takes
@@ -187,6 +250,9 @@ class ViterbiDecoder:
         use_kernel: bool = False,
         pack_survivors: bool = False,
         decision_depth: int = DEFAULT_DECISION_DEPTH,
+        one_pass: Optional[bool] = None,
+        time_tile: Optional[int] = None,
+        block_frames: Optional[int] = None,
     ) -> "ViterbiDecoder":
         """One front door for every deployed standard (DESIGN.md §7):
         resolves a ``repro.codes.registry`` entry — mother code, puncture
@@ -205,6 +271,9 @@ class ViterbiDecoder:
             decision_depth=decision_depth,
             puncture=code.puncture,
             termination=code.termination,
+            one_pass=one_pass,
+            time_tile=time_tile,
+            block_frames=block_frames,
         )
 
     @classmethod
@@ -218,7 +287,8 @@ class ViterbiDecoder:
         """Build from a configs.viterbi_k7.ViterbiConfig (the single
         vcfg -> decoder mapping; serve/step.py delegates here).  A config
         naming a registry standard (``vcfg.code``) inherits its puncture
-        pattern and termination."""
+        pattern and termination; kernel-geometry fields autotuned into
+        the config cells (``benchmarks/autotune.py``) carry over too."""
         puncture, termination = None, "zero"
         code_name = getattr(vcfg, "code", None)
         if code_name:
@@ -240,6 +310,8 @@ class ViterbiDecoder:
             decision_depth=decision_depth or DEFAULT_DECISION_DEPTH,
             puncture=puncture,
             termination=termination,
+            time_tile=getattr(vcfg, "time_tile", None),
+            block_frames=getattr(vcfg, "block_frames", None),
         )
 
     # -- rate matching ----------------------------------------------------
@@ -378,6 +450,9 @@ class ViterbiDecoder:
             precision=self.precision,
             use_kernel=self.use_kernel,
             pack_survivors=self.pack_survivors,
+            one_pass=self.one_pass,
+            time_tile=self.time_tile,
+            block_frames=self.block_frames,
         )
 
     # -- stateful chunked streaming (throughput-optimal) ------------------
@@ -400,11 +475,29 @@ class ViterbiDecoder:
         # internally and returns f32) so the jitted chunk signature is
         # stable across chunks for every precision policy
         lam = init_metric(n_frames, S, initial_state)
-        if self.pack_survivors:
-            hist = jnp.zeros((d_steps, n_frames, S // 16), jnp.int32)
-        else:
-            hist = jnp.zeros((d_steps, n_frames, S), jnp.int8)
+        hist = jnp.zeros(
+            (d_steps, n_frames, ring_words(S, self.ring_packed)),
+            ring_dtype(self.ring_packed),
+        )
         return StreamState(lam=lam, hist=hist, pos=0)
+
+    def _one_pass_tile(self, t_steps: int, d_steps: int) -> Optional[int]:
+        """Time tile for the one-pass kernel on a (t_steps, d_steps)
+        chunk, or None when the chunk should take the two-pass path —
+        the shared ``one_pass_time_tile`` eligibility (same guard as the
+        tiled window path): no usable common tile grid (e.g. a ragged
+        remainder chunk coprime to the depth), a survivor ring beyond
+        the VMEM budget (DESIGN.md §8 table), or unpackable packing."""
+        if not self.one_pass:
+            return None
+        return one_pass_time_tile(
+            d_steps,
+            t_steps,
+            self.spec.n_states,
+            self.ring_packed,
+            self.time_tile,
+            self.block_frames,
+        )
 
     def decode_chunk(
         self, state: StreamState, llrs: jnp.ndarray
@@ -417,20 +510,40 @@ class ViterbiDecoder:
         empty (F, 0) during warmup, (F, c) once pos >= decision_depth.
         Across decode_chunk calls plus flush_stream, every input stage is
         emitted exactly once, in order.
+
+        With ``one_pass`` (default when ``use_kernel``) the chunk runs
+        through the time-tiled kernel (DESIGN.md §8): the survivor window
+        lives in a VMEM ring and the delayed traceback happens in-kernel,
+        one commit per time tile — every decision still carries >= D
+        stages of lookahead, so the full/streaming agreement guarantee is
+        unchanged, and phi never touches HBM.
         """
         F, c, _ = llrs.shape
         if F != state.n_frames:
             raise ValueError(f"state has {state.n_frames} frames, got {F}")
         blocks = blocks_from_llrs(jnp.asarray(llrs), self.rho)
-        hist, lam, bits = _chunk_step(
-            state.hist,
-            state.lam,
-            blocks,
-            self.tables,
-            self.precision,
-            self.use_kernel,
-            self.pack_survivors,
-        )
+        tt = self._one_pass_tile(blocks.shape[0], state.depth_steps)
+        if tt:
+            hist, lam, bits = _chunk_step_fused(
+                state.hist,
+                state.lam,
+                blocks,
+                self.tables,
+                self.precision,
+                tt,
+                self.block_frames or DEFAULT_BLOCK_FRAMES,
+                self.ring_packed,
+            )
+        else:
+            hist, lam, bits = _chunk_step(
+                state.hist,
+                state.lam,
+                blocks,
+                self.tables,
+                self.precision,
+                self.use_kernel,
+                self.ring_packed,
+            )
         T = c // self.rho
         D = state.depth_steps
         # emitted window covers steps [pos-D, pos+T-D); drop negatives

@@ -1,0 +1,125 @@
+"""One-pass kernel geometry (DESIGN.md §8) — pure-Python helpers shared
+by the decoder front door and the Pallas kernels.
+
+Lives in ``core`` (not ``kernels``) so that ``repro.core`` never imports
+``jax.experimental.pallas`` at module load: the streaming entry points
+need the ring layout, tile-eligibility and VMEM-budget rules to DECIDE
+whether to launch the fused kernel, and only the launch itself (lazy,
+in-function) touches Pallas.  ``kernels.viterbi_acs`` re-exports these
+names, and is the only consumer that also implements them in silicon.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = [
+    "DEFAULT_BLOCK_FRAMES",
+    "DEFAULT_TIME_TILE",
+    "FUSED_RING_VMEM_BUDGET",
+    "MIN_ONE_PASS_TILE",
+    "ring_words",
+    "ring_dtype",
+    "ring_auto_packed",
+    "pick_time_tile",
+    "one_pass_time_tile",
+    "fused_ring_vmem_bytes",
+]
+
+DEFAULT_BLOCK_FRAMES = 256
+DEFAULT_TIME_TILE = 32
+
+# one-pass decoding keeps decision_depth + time_tile steps of survivors
+# resident in VMEM (DESIGN.md §8); rings beyond this budget must fall
+# back to the two-pass kernel rather than blowing the ~16MB core
+FUSED_RING_VMEM_BUDGET = 12 * 2**20
+
+# below this time tile the one-pass kernel degenerates (a near-full ring
+# traceback per tiny tile): both streaming entry points fall back to the
+# two-pass step instead — keep their criteria in sync via this constant
+MIN_ONE_PASS_TILE = 8
+
+
+def ring_words(n_states: int, pack_survivors: bool) -> int:
+    """Last-axis width of a survivor ring/tensor entry: 16 slots per
+    int32 word when packed (requires n_states % 16 == 0), else one int8
+    per state.  The single source of truth for the ring layout."""
+    return n_states // 16 if pack_survivors else n_states
+
+
+def ring_dtype(pack_survivors: bool):
+    return jnp.int32 if pack_survivors else jnp.int8
+
+
+def ring_auto_packed(n_states: int, pack_survivors: bool) -> bool:
+    """The ring PACKING POLICY, in one place: the §8 ring bit-packs
+    whenever the state count allows (the paper's 32-bit compaction is
+    part of the ring design), and always when explicitly requested."""
+    return pack_survivors or n_states % 16 == 0
+
+
+def pick_time_tile(d_steps: int, t_steps: int, target=None) -> int:
+    """Largest time tile <= ``target`` dividing both the decision depth
+    and the step count — the one-pass kernel needs the ring and the time
+    grid on a common tile (DESIGN.md §8).  Always >= 1."""
+    target = target or DEFAULT_TIME_TILE
+    g = math.gcd(int(d_steps), int(t_steps))
+    best = 1
+    c = 1
+    while c * c <= g:
+        if g % c == 0:
+            if c <= target:
+                best = max(best, c)
+            if g // c <= target:
+                best = max(best, g // c)
+        c += 1
+    return best
+
+
+def fused_ring_vmem_bytes(
+    depth_steps: int,
+    time_tile: int,
+    block_frames: int,
+    n_states: int,
+    pack_survivors: bool,
+) -> int:
+    """VMEM footprint of the one-pass kernel's survivor ring, in bytes —
+    the term that bounds usable decision depths (DESIGN.md §8 table)."""
+    itemsize = jnp.dtype(ring_dtype(pack_survivors)).itemsize
+    return (
+        (depth_steps + time_tile)
+        * block_frames
+        * ring_words(n_states, pack_survivors)
+        * itemsize
+    )
+
+
+def one_pass_time_tile(
+    d_steps: int,
+    t_steps: int,
+    n_states: int,
+    ring_packed: bool,
+    time_tile=None,
+    block_frames=None,
+):
+    """Shared one-pass eligibility check for every streaming entry point
+    (decoder.decode_chunk and the tiled window path): the time tile to
+    launch the fused kernel with, or None when the shape should take the
+    two-pass fallback — packing impossible, no usable common tile (a
+    time_tile~1 kernel walks the whole ring per step), or a survivor
+    ring beyond the VMEM budget."""
+    if d_steps <= 0 or t_steps <= 0:
+        return None
+    if ring_packed and n_states % 16:
+        return None
+    tt = pick_time_tile(d_steps, t_steps, time_tile)
+    if tt < min(MIN_ONE_PASS_TILE, d_steps, t_steps):
+        return None
+    bf = block_frames or DEFAULT_BLOCK_FRAMES
+    if (
+        fused_ring_vmem_bytes(d_steps, tt, bf, n_states, ring_packed)
+        > FUSED_RING_VMEM_BUDGET
+    ):
+        return None
+    return tt

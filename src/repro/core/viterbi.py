@@ -31,6 +31,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .kernel_geometry import (  # noqa: F401 — pallas-free geometry + re-export
+    DEFAULT_BLOCK_FRAMES,
+    one_pass_time_tile,
+    pick_time_tile,
+    ring_auto_packed,
+    ring_dtype,
+    ring_words,
+)
 from .trellis import AcsTables, CodeSpec, build_acs_tables
 
 __all__ = [
@@ -42,6 +50,7 @@ __all__ = [
     "TiledDecoderConfig",
     "tiled_decode_stream",
     "blocks_from_llrs",
+    "pick_time_tile",
 ]
 
 NEG = jnp.float32(-1.0e9)
@@ -113,7 +122,7 @@ def forward_fused(
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.viterbi_forward(
-            blocks, lam0, tables, precision
+            blocks, lam0, tables, precision, pack_survivors=pack_survivors
         )
 
     W = jnp.asarray(tables.fused_w, precision.matmul_dtype)  # (B+S, S*R)
@@ -268,6 +277,76 @@ class TiledDecoderConfig:
         return self.frame_len + 2 * self.overlap
 
 
+def _one_pass_window_plan(
+    spec: CodeSpec,
+    cfg: TiledDecoderConfig,
+    pack_survivors: bool,
+    time_tile: Optional[int],
+    block_frames: Optional[int],
+):
+    """(time_tile, ring_packed) for decoding tiling windows through the
+    one-pass kernel, or None to fall back to two-pass — the shared
+    ``one_pass_time_tile`` eligibility (tile grid + VMEM budget, the
+    same guard decode_chunk uses) plus the window-specific requirement
+    that the overlap sits on the rho grid (the ring holds whole radix
+    steps)."""
+    v, rho = cfg.overlap, cfg.rho
+    if v % rho:
+        return None
+    packed = ring_auto_packed(spec.n_states, pack_survivors)
+    tt = one_pass_time_tile(
+        v // rho, cfg.window // rho, spec.n_states, packed,
+        time_tile, block_frames,
+    )
+    return None if tt is None else (tt, packed)
+
+
+def _one_pass_windows(
+    frames: jnp.ndarray,  # (n_frames, window, beta)
+    spec: CodeSpec,
+    cfg: TiledDecoderConfig,
+    precision: AcsPrecision,
+    time_tile: int,
+    ring_packed: bool,
+    block_frames: Optional[int],
+) -> jnp.ndarray:
+    """Decode tiling windows through the one-pass kernel (DESIGN.md §8).
+
+    The left overlap plays the warmup, the right overlap the lookahead:
+    with decision depth D = overlap/rho steps, every center stage is
+    committed by the in-kernel sliding traceback with >= overlap stages
+    of lookahead — the same merge guarantee the two-pass tiled stitcher
+    relies on — and the kernel's emitted rows [2*overlap :) are exactly
+    the centers, so no flush traceback is needed at all.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    v, rho = cfg.overlap, cfg.rho
+    blocks = blocks_from_llrs(frames, rho)
+    d_steps = v // rho
+    tables = build_acs_tables(spec, rho)
+    n_frames = frames.shape[0]
+    lam0 = init_metric(n_frames, spec.n_states, None)
+    # the VMEM ring is bit-packed whenever the state count allows — the
+    # paper's 32-bit compaction is part of the §8 ring design
+    hist0 = jnp.zeros(
+        (d_steps, n_frames, ring_words(spec.n_states, ring_packed)),
+        ring_dtype(ring_packed),
+    )
+    bits, _, _ = kernel_ops.viterbi_decode_fused(
+        blocks,
+        lam0,
+        hist0,
+        tables,
+        precision,
+        time_tile=time_tile,
+        block_frames=block_frames or DEFAULT_BLOCK_FRAMES,
+        pack_survivors=ring_packed,
+    )
+    # rows r <-> stage r - v; centers are stages [v, v+f) = rows [2v, 2v+f)
+    return bits[2 * v:, :].T.astype(jnp.int32)  # (n_frames, f)
+
+
 def tiled_decode_stream(
     llrs: jnp.ndarray,
     spec: CodeSpec,
@@ -275,6 +354,9 @@ def tiled_decode_stream(
     precision: AcsPrecision = AcsPrecision(),
     use_kernel: bool = False,
     pack_survivors: bool = False,
+    one_pass: bool = False,
+    time_tile: Optional[int] = None,
+    block_frames: Optional[int] = None,
 ) -> jnp.ndarray:
     """Decode one long LLR stream (n, beta) via overlapping parallel frames.
 
@@ -282,6 +364,15 @@ def tiled_decode_stream(
     n/frame_len windows of length frame_len + 2*overlap, all windows decoded
     in parallel (truncated Viterbi: uniform start metric, argmax end state),
     and the center frame_len decisions of each window are stitched together.
+
+    With ``one_pass=True`` the windows run through the time-tiled
+    ACS+traceback kernel (DESIGN.md §8): survivors stay in a VMEM ring
+    and decisions are committed in-kernel with >= overlap stages of
+    lookahead, so the (T, F, S) survivor tensor never reaches HBM.
+    Decisions agree with the two-pass path wherever survivor paths merge
+    within the overlap — the same assumption window stitching itself
+    makes.  Falls back to two-pass when the overlap is not on the rho
+    grid (the ring needs whole radix steps) or states cannot be packed.
     """
     n, beta = llrs.shape
     f, v = cfg.frame_len, cfg.overlap
@@ -292,6 +383,17 @@ def tiled_decode_stream(
     padded = jnp.pad(jnp.asarray(llrs), ((pad_lo, pad_hi), (0, 0)))
     idx = jnp.arange(n_frames)[:, None] * f + jnp.arange(cfg.window)[None, :]
     frames = padded[idx]  # (n_frames, window, beta)
+    plan = (
+        _one_pass_window_plan(
+            spec, cfg, pack_survivors, time_tile, block_frames
+        )
+        if one_pass else None
+    )
+    if plan is not None:
+        center = _one_pass_windows(
+            frames, spec, cfg, precision, plan[0], plan[1], block_frames,
+        )
+        return center.reshape(-1)[:n]
     decoded = decode_frames(
         frames,
         spec,

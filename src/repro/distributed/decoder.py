@@ -141,6 +141,9 @@ def _streams_fn(
     precision: AcsPrecision,
     use_kernel: bool,
     pack_survivors: bool,
+    one_pass: bool,
+    time_tile,
+    block_frames,
 ):
     decode_one = functools.partial(
         tiled_decode_stream,
@@ -149,6 +152,9 @@ def _streams_fn(
         precision=precision,
         use_kernel=use_kernel,
         pack_survivors=pack_survivors,
+        one_pass=one_pass,
+        time_tile=time_tile,
+        block_frames=block_frames,
     )
     return jax.jit(
         shard_map(
@@ -170,11 +176,18 @@ def sharded_decode_streams(
     precision: Optional[AcsPrecision] = None,
     use_kernel: bool = False,
     pack_survivors: bool = False,
+    one_pass: bool = False,
+    time_tile: Optional[int] = None,
+    block_frames: Optional[int] = None,
 ) -> jnp.ndarray:
     """Serve-shape decode: (N, n, beta) streams, stream axis sharded.
 
     Each device runs the tiled window decoder (vmapped over its local
-    streams); equals jax.vmap(tiled_decode_stream) on one device.
+    streams); equals jax.vmap(tiled_decode_stream) on one device.  With
+    ``one_pass=True`` every shard's windows run through the time-tiled
+    ACS+traceback kernel (DESIGN.md §8) — the per-device program is still
+    exactly the single-device program, so numerics stay bit-identical to
+    one device by construction.
     """
     mesh = mesh or frame_mesh(axis=axis)
     n_dev = mesh.shape[axis]
@@ -183,5 +196,6 @@ def sharded_decode_streams(
     fn = _streams_fn(
         spec, cfg or TiledDecoderConfig(), mesh, axis,
         precision or AcsPrecision(), use_kernel, pack_survivors,
+        one_pass, time_tile, block_frames,
     )
     return fn(llrs)[:N]

@@ -1,24 +1,41 @@
-"""Jit'd public wrappers binding the Pallas ACS kernel to core.viterbi.
+"""Jit'd public wrappers binding the Pallas kernels to core.viterbi.
 
 ``viterbi_forward`` is plug-compatible with core.viterbi.forward_fused and
-is selected there via ``use_kernel=True``.  On CPU the kernel body runs in
-interpret mode (Python emulation of the TPU lowering); on TPU it compiles to
-a Mosaic kernel.
+is selected there via ``use_kernel=True`` — the exact two-pass path (full
+survivor tensor to HBM, XLA traceback).  ``viterbi_decode_fused`` is the
+one-pass time-tiled path (DESIGN.md §8): ACS + in-kernel sliding-window
+traceback, survivors never leave VMEM.  On CPU the kernel bodies run in
+interpret mode (Python emulation of the TPU lowering); on TPU they compile
+to Mosaic kernels — both wrappers auto-detect (``interpret=None``).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.trellis import AcsTables
 from . import viterbi_acs
-from .viterbi_acs import acs_forward_pallas, unpack_survivors
+from .viterbi_acs import (
+    acs_decode_fused_pallas,
+    acs_forward_pallas,
+    on_tpu,
+)
 
-__all__ = ["viterbi_forward", "on_tpu"]
+__all__ = [
+    "viterbi_forward",
+    "viterbi_decode_fused",
+    "ring_words",
+    "ring_dtype",
+    "on_tpu",
+]
 
 
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def ring_words(tables: AcsTables, pack_survivors: bool) -> int:
+    """Last-axis width of a survivor ring/tensor entry for these tables
+    (delegates to the kernel's single source of truth)."""
+    return viterbi_acs.ring_words(tables.n_states, pack_survivors)
+
+
+ring_dtype = viterbi_acs.ring_dtype
 
 
 def viterbi_forward(
@@ -29,13 +46,22 @@ def viterbi_forward(
     *,
     block_frames: int = viterbi_acs.DEFAULT_BLOCK_FRAMES,
     pack_survivors: bool = False,
+    interpret=None,
 ):
-    """Pallas-backed fused forward.  Returns (lam (F,S) f32, phi (T,F,S) i8)."""
+    """Pallas-backed fused forward (two-pass path).
+
+    Returns (lam (F,S) f32, phi) with phi (T, F, S) int8 slot indices, or
+    (T, F, S//16) int32 PACKED words when ``pack_survivors`` — packing
+    exists to avoid materializing the int8 tensor, so it is NOT eagerly
+    unpacked here; ``core.viterbi.traceback`` consumes the packed words
+    natively (lazy per-step unpack).  Use ``unpack_survivors`` if slot
+    indices are really needed.
+    """
     from repro.core.viterbi import AcsPrecision
 
     precision = precision or AcsPrecision()
     w = jnp.asarray(tables.fused_w)
-    lam, phi = acs_forward_pallas(
+    return acs_forward_pallas(
         blocks,
         lam0,
         w,
@@ -46,8 +72,47 @@ def viterbi_forward(
         matmul_dtype=precision.matmul_dtype,
         renorm=precision.renorm,
         pack_survivors=pack_survivors,
-        interpret=not on_tpu(),
+        interpret=interpret,
     )
-    if pack_survivors:
-        phi = unpack_survivors(phi, tables.n_states, tables.n_slots)
-    return lam, phi
+
+
+def viterbi_decode_fused(
+    blocks: jnp.ndarray,  # (T, F, B), T divisible by time_tile
+    lam0: jnp.ndarray,  # (F, S) f32
+    hist0: jnp.ndarray,  # (D, F, W) survivor ring (zeros for a fresh stream)
+    tables: AcsTables,
+    precision=None,
+    *,
+    time_tile: int = viterbi_acs.DEFAULT_TIME_TILE,
+    block_frames: int = viterbi_acs.DEFAULT_BLOCK_FRAMES,
+    pack_survivors: bool = False,
+    interpret=None,
+):
+    """One-pass time-tiled streaming decode (DESIGN.md §8).
+
+    Returns (bits (T*rho, F) int8, lam (F, S) f32, hist (D, F, W)):
+    delayed decisions for steps [-D, T-D) plus the carried stream state —
+    the fused equivalent of T/time_tile ``decoder._chunk_step`` calls,
+    with the survivor tensor never written to HBM.
+    """
+    from repro.core.viterbi import AcsPrecision
+
+    precision = precision or AcsPrecision()
+    w = jnp.asarray(tables.fused_w)
+    return acs_decode_fused_pallas(
+        blocks,
+        lam0,
+        hist0,
+        w,
+        n_states=tables.n_states,
+        n_slots=tables.n_slots,
+        k=tables.spec.k,
+        rho=tables.rho,
+        time_tile=time_tile,
+        block_frames=block_frames,
+        carry_dtype=precision.carry_dtype,
+        matmul_dtype=precision.matmul_dtype,
+        renorm=precision.renorm,
+        pack_survivors=pack_survivors,
+        interpret=interpret,
+    )

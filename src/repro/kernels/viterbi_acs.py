@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: fused radix-2^rho Viterbi ACS forward pass.
+"""Pallas TPU kernels: fused radix-2^rho Viterbi ACS forward pass, and the
+one-pass time-tiled ACS+traceback decode kernel.
 
 This is the compute hot-spot the paper optimizes with tensor cores (§V,
 §VIII); here it is re-derived for the TPU MXU (DESIGN.md §2):
@@ -19,9 +20,28 @@ This is the compute hot-spot the paper optimizes with tensor cores (§V,
   * survivors may be bit-packed 16-per-int32 (2-bit slots for rho=2) before
     the HBM store — the analogue of the paper's 32-bit output compaction.
 
+Two kernels share that formulation:
+
+``acs_forward_pallas`` — the exact two-pass path: forward only, the full
+survivor tensor phi (T, F, S) goes to HBM and an XLA scan traces it back.
+Stays the batch / tail-biting decode backend (WAVA needs every survivor).
+
+``acs_decode_fused_pallas`` (DESIGN.md §8) — the one-pass streaming path:
+grid (frame_tiles, time_tiles) with the time axis innermost, the path
+metric carry held in VMEM scratch ACROSS time tiles (the LLR block fetch
+is double-buffered by the Pallas pipeline), survivors kept in a VMEM ring
+of decision_depth + time_tile steps, and a per-tile sliding-window
+traceback INSIDE the kernel that emits decoded bits directly — phi never
+touches HBM.  It replays the chunked-streaming state machine of
+``core.decoder`` exactly (one delayed traceback per tile, commit the
+oldest tile of the window), so it is bit-identical to the XLA chunked
+path at equal tile size by construction.
+
 Grid: one program per frame tile.  VMEM per tile (defaults BF=256, k=7,
 rho=2, T<=128 steps): blocks 512KB + potentials 1MB + W 68KB + survivors
-(packed) 512KB — comfortably inside the ~16MB v5e VMEM budget.
+(packed) 512KB — comfortably inside the ~16MB v5e VMEM budget.  The
+one-pass kernel's budget is bounded by the ring (DESIGN.md §8 table),
+not by T: the time axis streams through in tiles.
 """
 from __future__ import annotations
 
@@ -30,10 +50,62 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["acs_forward_pallas", "DEFAULT_BLOCK_FRAMES"]
+__all__ = [
+    "acs_forward_pallas",
+    "acs_decode_fused_pallas",
+    "unpack_survivors",
+    "on_tpu",
+    "ring_words",
+    "ring_dtype",
+    "pick_time_tile",
+    "one_pass_time_tile",
+    "fused_ring_vmem_bytes",
+    "DEFAULT_BLOCK_FRAMES",
+    "DEFAULT_TIME_TILE",
+    "FUSED_RING_VMEM_BUDGET",
+]
 
-DEFAULT_BLOCK_FRAMES = 256
+# geometry (ring layout, tile eligibility, VMEM budget) is shared with
+# the pallas-free decoder front door — single source of truth there
+from repro.core.kernel_geometry import (  # noqa: E402,F401 — re-exports
+    DEFAULT_BLOCK_FRAMES,
+    DEFAULT_TIME_TILE,
+    FUSED_RING_VMEM_BUDGET,
+    MIN_ONE_PASS_TILE,
+    fused_ring_vmem_bytes,
+    one_pass_time_tile,
+    pick_time_tile,
+    ring_auto_packed,
+    ring_dtype,
+    ring_words,
+)
+
+_SLOT_BITS = {2: 1, 4: 2, 8: 3, 16: 4}  # slot width in bits per radix
+
+
+def on_tpu() -> bool:
+    """True when the default backend compiles Pallas to Mosaic (TPU)."""
+    return jax.default_backend() == "tpu"
+
+
+def _resolve_interpret(interpret):
+    """``interpret=None`` means auto: emulate everywhere but on TPU.
+
+    The old ``interpret=True`` default was a perf footgun — any caller
+    that forgot the flag silently ran the Python emulation on TPU.
+    """
+    return not on_tpu() if interpret is None else bool(interpret)
+
+
+def _pack_phi(phi: jnp.ndarray, n_states: int, bits: int) -> jnp.ndarray:
+    """(..., S) slot indices -> (..., S//16) int32, 16 slots per word."""
+    grp = phi.reshape(phi.shape[:-1] + (n_states // 16, 16)).astype(jnp.int32)
+    shifts = bits * jax.lax.broadcasted_iota(
+        jnp.int32, (1,) * (grp.ndim - 1) + (16,), grp.ndim - 1
+    )
+    return jnp.sum(grp << shifts, axis=-1).astype(jnp.int32)
 
 
 def _acs_kernel(
@@ -52,7 +124,7 @@ def _acs_kernel(
 ):
     T = blocks_ref.shape[0]
     S, R = n_states, n_slots
-    bits = {2: 1, 4: 2, 8: 3, 16: 4}[R]  # slot width in bits
+    bits = _SLOT_BITS[R]
 
     def step(t, lam):
         l_t = blocks_ref[t]  # (BF, B)
@@ -66,10 +138,7 @@ def _acs_kernel(
         new_lam = jnp.max(pot, axis=-1)
         phi = jnp.argmax(pot, axis=-1)  # (BF, S) int32 in [0, R)
         if pack_survivors:
-            grp = phi.reshape(phi.shape[0], S // 16, 16).astype(jnp.int32)
-            shifts = (bits * jax.lax.broadcasted_iota(jnp.int32, (1, 1, 16), 2))
-            packed = jnp.sum(grp << shifts, axis=-1).astype(jnp.int32)
-            phi_ref[t] = packed
+            phi_ref[t] = _pack_phi(phi, S, bits)
         else:
             phi_ref[t] = phi.astype(jnp.int8)
         if renorm:
@@ -105,13 +174,15 @@ def acs_forward_pallas(
     matmul_dtype=jnp.float32,
     renorm: bool = True,
     pack_survivors: bool = False,
-    interpret: bool = True,
+    interpret=None,
 ):
     """Run the fused forward pass.  Returns (lam_final (F,S) f32, phi).
 
     phi is (T, F, S) int8 slot indices, or (T, F, S//16) int32 when
     ``pack_survivors`` (16 slots x 2 bits per word for rho=2).
+    ``interpret=None`` auto-detects: Mosaic on TPU, emulation elsewhere.
     """
+    interpret = _resolve_interpret(interpret)
     T, F, B = blocks.shape
     S, R = n_states, n_slots
     if pack_survivors and S % 16:
@@ -166,8 +237,308 @@ def acs_forward_pallas(
 
 def unpack_survivors(phi_packed: jnp.ndarray, n_states: int, n_slots: int):
     """(T, F, S//16) int32 -> (T, F, S) int8 slot indices."""
-    bits = {2: 1, 4: 2, 8: 3, 16: 4}[n_slots]
+    bits = _SLOT_BITS[n_slots]
     T, F, _ = phi_packed.shape
     shifts = bits * jnp.arange(16, dtype=jnp.int32)
     un = (phi_packed[..., None] >> shifts) & (n_slots - 1)
     return un.reshape(T, F, n_states).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# One-pass time-tiled decode kernel (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _ring_select(phi_s, state, *, n_states, n_slots, pack_survivors):
+    """Per-frame survivor-slot lookup phi_s[f, state[f]] without a gather.
+
+    Lane gathers are awkward on the VPU; a one-hot compare + masked sum
+    over the (short) state axis lowers cleanly and costs BF*S VPU ops —
+    for the packed ring the compare runs over S/16 words only, then a
+    per-lane variable shift extracts the 2-bit slot.
+    """
+    if pack_survivors:
+        W = n_states // 16
+        word_idx = state >> 4  # which int32 word holds the slot
+        onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, (state.shape[0], W), 1)
+            == word_idx[:, None]
+        )
+        word = jnp.sum(jnp.where(onehot, phi_s, 0), axis=1)
+        shift = _SLOT_BITS[n_slots] * (state & 15)
+        return (word >> shift) & (n_slots - 1)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (state.shape[0], n_states), 1)
+        == state[:, None]
+    )
+    return jnp.sum(jnp.where(onehot, phi_s.astype(jnp.int32), 0), axis=1)
+
+
+def _fused_decode_kernel(
+    blocks_ref,  # (TT, BF, B)    this tile's LLR blocks (matmul dtype)
+    lam0_ref,  # (BF, S)        entry path metrics f32
+    hist0_ref,  # (D, BF, W)     entry survivor ring (chronological)
+    w_ref,  # (B+S, S*R)
+    bits_out_ref,  # (TT*rho, BF) int8   committed bits for this tile
+    lam_out_ref,  # (BF, S) f32         exit path metrics
+    hist_out_ref,  # (D, BF, W)          exit survivor ring (chronological)
+    lam_scr,  # VMEM (BF, S) f32        carry across time tiles
+    ring_scr,  # VMEM (RING, BF, W)     survivor ring, RING = D + TT steps
+    *,
+    n_states: int,
+    n_slots: int,
+    k: int,
+    rho: int,
+    n_time_tiles: int,
+    carry_dtype,
+    matmul_dtype,
+    renorm: bool,
+    pack_survivors: bool,
+):
+    TT = blocks_ref.shape[0]
+    D = hist0_ref.shape[0]
+    S, R = n_states, n_slots
+    RING = D + TT
+    bits = _SLOT_BITS[R]
+    mask = (1 << (k - 1 - rho)) - 1
+    j = pl.program_id(1)
+    n_ring_tiles = RING // TT  # = D//TT + 1; ring slot tile of step s
+
+    # -- (re)initialize the carry at the first time tile of a frame tile --
+    @pl.when(j == 0)
+    def _init():
+        # round through carry_dtype first, like the XLA scan's init cast
+        lam_scr[...] = lam0_ref[...].astype(carry_dtype).astype(jnp.float32)
+        # entry ring holds steps -D..-1; step s lives at slot s mod RING,
+        # so step -D+i lands at slot TT+i — one static block copy.
+        ring_scr[TT:, :, :] = hist0_ref[...]
+
+    # -- ACS over this tile's TT steps, survivors into the VMEM ring ------
+    write_base = jax.lax.rem(j, n_ring_tiles) * TT  # slot of step j*TT
+
+    def step(t, lam):
+        l_t = blocks_ref[t]
+        x = jnp.concatenate(
+            [l_t.astype(matmul_dtype), lam.astype(matmul_dtype)], axis=-1
+        )
+        pot = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+        pot = pot.reshape(pot.shape[0], S, R)
+        new_lam = jnp.max(pot, axis=-1)
+        phi = jnp.argmax(pot, axis=-1)
+        if pack_survivors:
+            ring_scr[write_base + t] = _pack_phi(phi, S, bits)
+        else:
+            ring_scr[write_base + t] = phi.astype(jnp.int8)
+        if renorm:
+            new_lam = new_lam - jnp.max(new_lam, axis=-1, keepdims=True)
+        # scratch stays f32 but holds the carry-rounded value, so the
+        # numerics are identical to the XLA scan's astype chain
+        return new_lam.astype(carry_dtype).astype(jnp.float32)
+
+    lam = jax.lax.fori_loop(0, TT, step, lam_scr[...])
+    lam_scr[...] = lam
+
+    # -- sliding-window traceback: commit the oldest tile of the window --
+    # window = steps [(j+1)*TT - RING, (j+1)*TT); the committed TT steps
+    # get >= D steps of lookahead — exactly decoder._chunk_step per tile.
+    front = jnp.argmax(lam, axis=-1).astype(jnp.int32)  # (BF,)
+    read_base = jax.lax.rem(j + 1, n_ring_tiles) * TT  # slot of window[0]
+
+    def tb_slot(i):
+        slot = read_base + i
+        return jnp.where(slot >= RING, slot - RING, slot)
+
+    def walk(idx, state):
+        # phase-agnostic single backward step at window offset i
+        i = idx
+        phi_s = ring_scr[tb_slot(i)]
+        sel = _ring_select(
+            phi_s, state,
+            n_states=S, n_slots=R, pack_survivors=pack_survivors,
+        )
+        return ((state & mask) << rho) | sel
+
+    # phase 1 (lookahead region, newest D steps): walk only
+    def phase1(n, state):
+        return walk(RING - 1 - n, state)
+
+    state = jax.lax.fori_loop(0, D, phase1, front)
+
+    # phase 2 (oldest TT steps): walk and emit this tile's decisions
+    def phase2(n, state):
+        i = TT - 1 - n
+        v = state >> (k - 1 - rho)  # the rho decoded bits of step i
+        vbits = (
+            v[None, :] >> jax.lax.broadcasted_iota(jnp.int32, (rho, 1), 0)
+        ) & 1  # (rho, BF), chronological (LSB-first, trellis.py)
+        bits_out_ref[pl.ds(i * rho, rho), :] = vbits.astype(jnp.int8)
+        return walk(i, state)
+
+    jax.lax.fori_loop(0, TT, phase2, state)
+
+    # -- stream out the final carry + ring at the last time tile ----------
+    @pl.when(j == n_time_tiles - 1)
+    def _flush():
+        lam_out_ref[...] = lam_scr[...]
+        # exit ring = the newest D steps, rotated back to chronological;
+        # the rotation is static because n_time_tiles is static.
+        base = ((n_time_tiles + 1) % n_ring_tiles) * TT
+        n1 = min(D, RING - base)
+        hist_out_ref[0:n1] = ring_scr[base:base + n1]
+        if D > n1:
+            hist_out_ref[n1:D] = ring_scr[0:D - n1]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_states",
+        "n_slots",
+        "k",
+        "rho",
+        "time_tile",
+        "block_frames",
+        "carry_dtype",
+        "matmul_dtype",
+        "renorm",
+        "pack_survivors",
+        "interpret",
+    ),
+)
+def acs_decode_fused_pallas(
+    blocks: jnp.ndarray,  # (T, F, B), T divisible by time_tile
+    lam0: jnp.ndarray,  # (F, S) f32
+    hist0: jnp.ndarray,  # (D, F, W) survivor ring at entry (chronological)
+    w: jnp.ndarray,  # (B+S, S*R)
+    *,
+    n_states: int,
+    n_slots: int,
+    k: int,
+    rho: int,
+    time_tile: int = DEFAULT_TIME_TILE,
+    block_frames: int = DEFAULT_BLOCK_FRAMES,
+    carry_dtype=jnp.float32,
+    matmul_dtype=jnp.float32,
+    renorm: bool = True,
+    pack_survivors: bool = False,
+    interpret=None,
+):
+    """One-pass time-tiled decode (DESIGN.md §8).
+
+    Consumes T radix steps of LLR blocks and a decision-depth survivor
+    ring carried from an earlier call (zeros for a fresh stream), runs
+    the ACS recursion with the path-metric carry resident in VMEM, and
+    commits delayed decisions tile by tile with an in-kernel traceback —
+    the survivor tensor never reaches HBM.
+
+    Returns (bits, lam, hist):
+      * bits (T*rho, F) int8 — decisions for steps [-D, T-D) relative to
+        this call's first step (rows r <-> step r/rho - D); rows for
+        negative steps replay whatever ``hist0`` held (warmup filler on a
+        fresh stream — the caller slices them off, exactly like the XLA
+        chunked path's emission accounting);
+      * lam (F, S) f32 — path metrics at the stream front;
+      * hist (D, F, W) — the exit ring (the newest D steps), chronological,
+        ready for the next call or for ``core.viterbi.traceback`` (flush).
+
+    Semantics are exactly ``decoder._chunk_step`` applied per time tile,
+    so output is bit-identical to the XLA chunked-streaming path at
+    chunk = time_tile by construction, and agrees with any other chunking
+    (and with full-sequence decode) wherever survivor paths merge within
+    the decision depth.
+    """
+    interpret = _resolve_interpret(interpret)
+    T, F, B = blocks.shape
+    D = hist0.shape[0]
+    S, R = n_states, n_slots
+    TT = min(time_tile, T)
+    if T % TT:
+        raise ValueError(f"T={T} not divisible by time_tile={TT}")
+    if D % TT:
+        raise ValueError(f"depth D={D} steps not divisible by time_tile={TT}")
+    if pack_survivors and S % 16:
+        raise ValueError("pack_survivors requires n_states % 16 == 0")
+    W = ring_words(S, pack_survivors)
+    ring_dt = ring_dtype(pack_survivors)
+    if hist0.shape[2] != W or hist0.dtype != ring_dt:
+        raise ValueError(
+            f"hist0 {hist0.shape}/{hist0.dtype} does not match "
+            f"pack_survivors={pack_survivors} (want (*, F, {W}) {ring_dt})"
+        )
+    Nt = T // TT
+
+    BF = min(block_frames, F)
+    pad = (-F) % BF
+    if pad:
+        blocks = jnp.pad(blocks, ((0, 0), (0, pad), (0, 0)))
+        lam0 = jnp.pad(lam0, ((0, pad), (0, 0)))
+        hist0 = jnp.pad(hist0, ((0, 0), (0, pad), (0, 0)))
+    Fp = F + pad
+    grid = (Fp // BF, Nt)  # time axis innermost: sequential carry in VMEM
+
+    kernel = functools.partial(
+        _fused_decode_kernel,
+        n_states=S,
+        n_slots=R,
+        k=k,
+        rho=rho,
+        n_time_tiles=Nt,
+        carry_dtype=carry_dtype,
+        matmul_dtype=matmul_dtype,
+        renorm=renorm,
+        pack_survivors=pack_survivors,
+    )
+    bits, lam_out, hist_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TT, BF, B), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((BF, S), lambda i, j: (i, 0)),
+            pl.BlockSpec((D, BF, W), lambda i, j: (0, i, 0)),
+            pl.BlockSpec(w.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TT * rho, BF), lambda i, j: (j, i)),
+            pl.BlockSpec((BF, S), lambda i, j: (i, 0)),
+            pl.BlockSpec((D, BF, W), lambda i, j: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T * rho, Fp), jnp.int8),
+            jax.ShapeDtypeStruct((Fp, S), jnp.float32),
+            jax.ShapeDtypeStruct((D, Fp, W), ring_dt),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((BF, S), jnp.float32),
+            pltpu.VMEM((D + TT, BF, W), ring_dt),
+        ],
+        interpret=interpret,
+    )(
+        blocks.astype(matmul_dtype),
+        lam0,
+        hist0,
+        w.astype(matmul_dtype),
+    )
+
+    if pad:
+        bits = bits[:, :F]
+        lam_out = lam_out[:F]
+        hist_out = hist_out[:, :F]
+    return bits, lam_out, hist_out
+
+
+def fused_ring_vmem_bytes(
+    depth_steps: int,
+    time_tile: int,
+    block_frames: int,
+    n_states: int,
+    pack_survivors: bool,
+) -> int:
+    """VMEM footprint of the one-pass kernel's survivor ring, in bytes —
+    the term that bounds usable decision depths (DESIGN.md §8 table)."""
+    itemsize = jnp.dtype(ring_dtype(pack_survivors)).itemsize
+    return (
+        (depth_steps + time_tile)
+        * block_frames
+        * ring_words(n_states, pack_survivors)
+        * itemsize
+    )

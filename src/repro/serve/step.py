@@ -57,8 +57,11 @@ def make_viterbi_serve_step(vcfg, precision=None, use_kernel: bool = False,
     mode="tiled": frame tiling turns each stream into stream_len/frame_len
     independent windows; vmap adds the stream batch — all of it pure data
     parallelism (the paper's §III parallelization), sharded over every
-    mesh axis.  mode="batch": each stream is one truncated-Viterbi frame
-    (no tiling — latency scales with stream_len).
+    mesh axis.  With ``use_kernel=True`` the windows decode through the
+    one-pass time-tiled ACS+traceback kernel (DESIGN.md §8): survivors
+    stay in a VMEM ring, no phi round-trip to HBM.  mode="batch": each
+    stream is one truncated-Viterbi frame (no tiling — latency scales
+    with stream_len; stays on the exact two-pass path).
 
     The stateful chunked-streaming mode carries state across calls and so
     is not a step function — build the decoder with

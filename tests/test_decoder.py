@@ -191,6 +191,12 @@ cfg = TiledDecoderConfig()
 ref_s = np.asarray(jax.vmap(lambda x: tiled_decode_stream(x, CODE_K7_CCSDS, cfg))(sl))
 got_s = np.asarray(sharded_decode_streams(sl, CODE_K7_CCSDS, cfg))
 np.testing.assert_array_equal(ref_s, got_s)
+# one-pass time-tiled kernel (DESIGN.md par.8) under shard_map: the
+# per-device program is still exactly the single-device program
+ref_1 = np.asarray(jax.vmap(
+    lambda x: tiled_decode_stream(x, CODE_K7_CCSDS, cfg, one_pass=True))(sl))
+got_1 = np.asarray(sharded_decode_streams(sl, CODE_K7_CCSDS, cfg, one_pass=True))
+np.testing.assert_array_equal(ref_1, got_1)
 print("OK")
 """
     r = subprocess.run(

@@ -77,11 +77,32 @@ def test_kernel_frame_padding():
 
 
 def test_kernel_survivor_packing_roundtrip():
+    """pack_survivors returns the PACKED (T, F, S//16) int32 words —
+    eager unpacking would re-materialize exactly the tensor packing
+    exists to avoid; traceback consumes the words natively."""
     lam_r, phi_r, lam_k, phi_k = _run_both(
         SPECS["k7"], 2, 130, 16, pack_survivors=True
     )
-    np.testing.assert_array_equal(phi_r, phi_k)
+    assert phi_k.dtype == jnp.int32 and phi_k.shape == (8, 130, 4)
+    np.testing.assert_array_equal(
+        phi_r, unpack_survivors(phi_k, 64, 4)
+    )
     np.testing.assert_allclose(lam_r, lam_k, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_packed_traceback_end_to_end():
+    """decode_frames(use_kernel=True, pack_survivors=True): the packed
+    phi flows straight into the lazy-unpacking traceback (this path used
+    to re-materialize the int8 tensor first)."""
+    spec = SPECS["k7"]
+    rng = np.random.default_rng(12)
+    llr = jnp.asarray(rng.normal(0, 1, (4, 96, spec.beta)), jnp.float32)
+    a = decode_frames(llr, spec, 2, None, None, use_kernel=True)
+    b = decode_frames(llr, spec, 2, None, None, use_kernel=True,
+                      pack_survivors=True)
+    c = decode_frames(llr, spec, 2, None, None)
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+    np.testing.assert_array_equal(np.array(a), np.array(c))
 
 
 def test_unpack_survivors_inverse():
