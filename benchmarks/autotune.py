@@ -1,7 +1,13 @@
-"""One-pass kernel autotuner (DESIGN.md §8): sweep the fused decode
-kernel's geometry — block_frames x time_tile x matmul_dtype — per
-serving cell, and record the chosen configs into the ``KERNEL_CONFIGS``
-cells of ``src/repro/configs/viterbi_k7.py``.
+"""Kernel autotuner (DESIGN.md §8/§9): per serving cell, sweep
+
+  * the one-pass fused decode kernel's geometry — block_frames x
+    time_tile x matmul_dtype — and
+  * the time-parallel matrix-scan geometry — transfer_tile x
+    matmul_dtype at the cell's single-stream (F=1) shape —
+
+and record the chosen configs into the ``KERNEL_CONFIGS`` cells of
+``src/repro/configs/viterbi_k7.py`` (``config_for_cell`` serves both the
+streaming and the time-parallel geometry from the same entry).
 
     PYTHONPATH=src python -m benchmarks.autotune [--fast] [--apply] \
         [--cells decode_64k decode_64k_wifi_r34]
@@ -47,6 +53,74 @@ SWEEP = {
     "time_tile": (16, 32, 64),
     "matmul_dtype": ("f32", "bf16"),
 }
+
+# §9 time-parallel matrix scan: the tile trades scan depth (large tiles,
+# CPU/throughput-friendly) against dependency-chain length (small tiles,
+# accelerator-latency-friendly), so it is a genuine tunable.  Dtypes
+# swept per tile target; the tile targets themselves are derived per
+# cell from its serving shape (see _tune_time_parallel).
+TP_DTYPES = ("f32", "bf16")
+
+
+def _tune_time_parallel(cell, iters: int, fast: bool):
+    """Sweep the §9 transfer_tile x matmul_dtype grid for one cell.
+
+    Tile targets bracket ``default_transfer_tile`` of the CELL's own
+    single-stream step count (the shape the tuned value will serve);
+    the wall measurement runs at a shrunken stream — CPU-affordable,
+    RELATIVE ordering only, same convention as ``_tune_cell`` — sized
+    so every swept target still tiles it >= 8x.  Best first."""
+    import itertools as it
+
+    from repro.codes.registry import get_code
+    from repro.core.kernel_geometry import (
+        default_transfer_tile, pick_transfer_tile,
+    )
+    from repro.core.timeparallel import decode_time_parallel
+    from repro.core.viterbi import AcsPrecision
+
+    code = get_code(cell.code)
+    spec = code.spec
+    base = default_transfer_tile(cell.stream_len // 2)
+    if fast:
+        base = min(base, 64)
+    targets = sorted({max(16, base // 2), base, 2 * base})
+    n_stages = min(cell.stream_len, 16 * max(targets))
+    key = jax.random.PRNGKey(1)
+    llrs = jax.random.normal(key, (1, n_stages, spec.beta))
+    t_steps = n_stages // 2
+    rows, seen = [], set()
+    for tt_target, mm in it.product(targets, TP_DTYPES):
+        tt = pick_transfer_tile(t_steps, tt_target)
+        if (tt, mm) in seen or t_steps // tt < 2:
+            continue
+        seen.add((tt, mm))
+        prec = (
+            AcsPrecision(matmul_dtype=jnp.bfloat16,
+                         channel_dtype=jnp.bfloat16)
+            if mm == "bf16" else AcsPrecision()
+        )
+
+        def run():
+            return decode_time_parallel(
+                llrs, spec, rho=2, initial_state=None,
+                precision=prec, transfer_tile=tt,
+            ).block_until_ready()
+
+        run()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run()
+        dt = (time.perf_counter() - t0) / iters
+        rows.append({
+            "transfer_tile": tt,
+            "matmul_dtype": mm,
+            "n_tiles": t_steps // tt,
+            "us_per_call": dt * 1e6,
+            "tokens_per_s": n_stages / dt,
+        })
+    rows.sort(key=lambda r: r["us_per_call"])
+    return rows
 
 
 def _tune_cell(cell, n_frames: int, n_stages: int, depth: int, iters: int):
@@ -122,14 +196,16 @@ def _tune_cell(cell, n_frames: int, n_stages: int, depth: int, iters: int):
 def _format_configs(chosen: dict) -> str:
     lines = ["KERNEL_CONFIGS = {"]
     lines.append(
-        "    # streaming cells: packed VMEM ring, tuned by "
-        "benchmarks.autotune"
+        "    # streaming cells: packed VMEM ring + §9 transfer tile, "
+        "tuned by benchmarks.autotune"
     )
     for cell, kc in sorted(chosen.items()):
+        tp = kc.get("transfer_tile")
+        tail = f", transfer_tile={tp}" if tp else ""
         lines.append(
             f'    "{cell}": KernelConfig('
             f'{kc["block_frames"]}, {kc["time_tile"]}, '
-            f'{kc["pack_survivors"]}, "{kc["matmul_dtype"]}"),'
+            f'{kc["pack_survivors"]}, "{kc["matmul_dtype"]}"{tail}),'
         )
     lines.append("}")
     return "\n".join(lines)
@@ -182,7 +258,18 @@ def main() -> None:
             print(f"[autotune] {name}: tail-biting, stays two-pass — skip")
             continue
         rows = _tune_cell(cell, n_frames, n_stages, depth, args.iters)
-        best = rows[0]
+        tp_rows = _tune_time_parallel(cell, args.iters, args.fast)
+        best = dict(rows[0])
+        if tp_rows:
+            # the cell ships ONE matmul_dtype (the streaming winner's),
+            # so pick the best tp tile measured AT that dtype — grafting
+            # the overall tp winner could pair a tile with a dtype it
+            # was never timed against
+            matched = [
+                r for r in tp_rows
+                if r["matmul_dtype"] == best["matmul_dtype"]
+            ]
+            best["transfer_tile"] = (matched or tp_rows)[0]["transfer_tile"]
         chosen[name] = best
         artifact = {
             "cell": name,
@@ -193,6 +280,10 @@ def main() -> None:
             "backend": jax.default_backend(),
             "best": best,
             "sweep": rows,
+            "time_parallel": {
+                "best": tp_rows[0] if tp_rows else None,
+                "sweep": tp_rows,
+            },
         }
         path = OUT / f"{name}.json"
         path.write_text(json.dumps(artifact, indent=2))
@@ -200,13 +291,15 @@ def main() -> None:
             f"[autotune] {name}: best bf={best['block_frames']} "
             f"tt={best['time_tile']} pack={best['pack_survivors']} "
             f"mm={best['matmul_dtype']} "
+            f"tp={best.get('transfer_tile')} "
             f"({best['us_per_call']:.0f}us, {best['kernel_bytes']}B) "
             f"-> {path.relative_to(REPO)}"
         )
     if args.apply and chosen:
         apply_to_configs({
-            k: {kk: v[kk] for kk in (
-                "block_frames", "time_tile", "pack_survivors", "matmul_dtype"
+            k: {kk: v.get(kk) for kk in (
+                "block_frames", "time_tile", "pack_survivors",
+                "matmul_dtype", "transfer_tile",
             )} for k, v in chosen.items()
         })
 

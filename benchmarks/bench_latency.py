@@ -1,0 +1,182 @@
+"""Single-stream decode latency: sequential scan vs time-parallel
+(DESIGN.md §9) — the serving axis the throughput benches cannot see.
+
+    PYTHONPATH=src python -m benchmarks.bench_latency
+    PYTHONPATH=src python -m benchmarks.run --only latency
+
+Grid: F in {1, 4, 16} x T in {64k, 512k} stages, one ``latency/seq@...``
+and one ``latency/tp@...`` row each, plus ``latency/speedup@...``
+summary rows at F=1.  Each row reports:
+
+  * measured CPU wall time (``us_per_call``) — on a CPU this measures
+    THROUGHPUT, not latency: a CPU has no idle lanes, so the
+    time-parallel path's S x formation work makes it *slower* there and
+    the wall ratio is expected to be < 1.  TP rows whose formation work
+    would be excessive on the bench host report wall=skipped.
+  * the sequential-dependency depth of the lowered HLO
+    (``hlocount.total_trip_count`` — the program's while loops run back
+    to back; ``longest=`` is ``max_trip_count``, the longest single
+    loop): ~2 T/rho for the scan-then-traceback path vs ~3 transfer
+    tiles for the time-parallel decode (its associative scan unrolls
+    into log2(n_tiles) compose levels, not a loop) — the §9
+    depth-reduction claim, verified on the compiled program.
+  * a modeled device latency ``modeled=..us``: HLO depth x per-step
+    dependent latency + static flops/peak + static interface bytes/bw
+    on the reference accelerator (``roofline.TPU_V5E``).  The byte term
+    uses the kernel-interface accounting of ``kernels/traffic.py`` (the
+    Pallas formation kernel keeps its matrix carry in VMEM; hlocount on
+    the CPU interpret program would bill emulation temporaries as HBM).
+    Dependent ACS steps cannot pipeline — step t+1 needs step t's
+    metrics — so depth, not flops, bounds single-stream latency on an
+    underfilled accelerator; this is the number the ≥4x acceptance gate
+    reads, with the honest CPU wall ratio printed beside it.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import hlocount
+from repro.core.kernel_geometry import pick_transfer_tile
+from repro.core.timeparallel import decode_time_parallel
+from repro.core.trellis import CODE_K7_CCSDS, build_acs_tables
+from repro.core.viterbi import decode_frames
+from repro.roofline import TPU_V5E
+
+# latency of one dependent loop iteration on the reference accelerator:
+# MXU issue-to-result for a small matvec plus loop bookkeeping.  The
+# modeled numbers are a ROOFLINE-style lower bound used for ratios
+# between two programs under the same model, not wall-clock predictions.
+STEP_LATENCY_S = 2.0e-7
+
+# measuring the time-parallel path on the bench host costs ~S x the
+# sequential flops; above this budget the wall column is skipped and the
+# row carries depth + modeled latency only
+_MEASURE_FLOP_BUDGET = 700e9
+
+
+def _static_costs(T: int, F: int, tile: int):
+    """(seq, tp) {flops, bytes} from shapes alone — the §8
+    ``kernels/traffic.py`` accounting style: a kernel's HBM traffic is
+    its interface; matrix/metric carries live in VMEM."""
+    tables = build_acs_tables(CODE_K7_CCSDS, 2)
+    S, R, B = tables.n_states, tables.n_slots, tables.llr_block
+    t = T // 2  # radix-4 steps
+    step_flops = (B + S) * S * R * 2  # one fused-ACS row-step (§2)
+    blocks = t * F * B * 4
+    phis = t * F * S  # int8 survivors
+    bits = F * T
+    seq = {
+        "flops": t * F * step_flops,
+        "bytes": blocks + phis + bits + F * S * 4,
+    }
+    n_tiles = t // tile
+    m_bytes = n_tiles * F * S * S * 4
+    compose_flops = 4 * n_tiles * F * S * S * S * 2  # 2 scans, ~2N each
+    tp = {
+        # formation folds the S entry states into the batch (S x), then
+        # recovery re-runs the plain ACS (1 x), plus the scan composes
+        "flops": t * F * step_flops * (S + 1) + compose_flops,
+        # blocks read twice (formation + recovery); M written once,
+        # read by both scans and the entry/suffix reductions
+        "bytes": 2 * blocks + 4 * m_bytes + phis + bits + F * S * 4,
+    }
+    return seq, tp
+
+
+def _modeled_us(depth: int, costs: dict) -> float:
+    t = (
+        depth * STEP_LATENCY_S
+        + costs["flops"] / TPU_V5E.peak_flops
+        + costs["bytes"] / TPU_V5E.hbm_bw
+    )
+    return t * 1e6
+
+
+def _row(name, fn, llrs, n_bits, costs, iters, measure=True):
+    lowered = jax.jit(fn).lower(llrs).compile()
+    text = lowered.as_text()
+    depth = hlocount.total_trip_count(text)
+    longest = hlocount.max_trip_count(text)
+    modeled_us = _modeled_us(depth, costs)
+    if measure:
+        lowered(llrs).block_until_ready()  # warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            lowered(llrs).block_until_ready()
+        wall = (time.perf_counter() - t0) / iters
+        wall_us = wall * 1e6
+        derived = f"{n_bits / wall / 1e6:.1f}Mb/s-cpu"
+    else:
+        wall_us = 0.0
+        derived = "wall=skipped"
+    derived += (
+        f";modeled={modeled_us:.1f}us;depth={depth};longest={longest}"
+    )
+    return (name, wall_us, derived), wall_us, modeled_us, depth
+
+
+def bench(
+    t_stages=(1 << 16, 1 << 19),
+    n_frames=(1, 4, 16),
+    iters: int = 2,
+):
+    """Returns (name, us_per_call, derived) rows for run.py."""
+    spec = CODE_K7_CCSDS
+    rho = 2
+    rows = []
+    for T in t_stages:
+        tile = pick_transfer_tile(T // rho)
+        n_tiles = (T // rho) // tile
+        speedups = {}
+        for F in n_frames:
+            key = jax.random.PRNGKey(T % 97 + F)
+            llrs = jax.random.normal(key, (F, T, spec.beta), jnp.float32)
+            shape = f"T={T},F={F}"
+            seq_costs, tp_costs = _static_costs(T, F, tile)
+
+            def seq(x):
+                return decode_frames(x, spec, rho=rho, initial_state=None)
+
+            row, seq_wall, seq_mod, seq_depth = _row(
+                f"latency/seq@{shape}", seq, llrs, F * T, seq_costs, iters
+            )
+            rows.append(row)
+
+            def tp(x, tile=tile):
+                return decode_time_parallel(
+                    x, spec, rho=rho, initial_state=None,
+                    transfer_tile=tile,
+                )
+
+            row, tp_wall, tp_mod, tp_depth = _row(
+                f"latency/tp@{shape}", tp, llrs, F * T, tp_costs,
+                max(1, iters - 1),
+                measure=tp_costs["flops"] <= _MEASURE_FLOP_BUDGET,
+            )
+            rows.append(row)
+            if F == 1:
+                speedups = {
+                    "wall": seq_wall / tp_wall if tp_wall else 0.0,
+                    "modeled": seq_mod / tp_mod,
+                    "seq_depth": seq_depth,
+                    "tp_depth": tp_depth,
+                }
+        if speedups:  # only emitted when the F=1 shape ran
+            rows.append((
+                f"latency/speedup@T={T},F=1",
+                0.0,
+                f"{speedups['modeled']:.1f}x-modeled"
+                f";{speedups['wall']:.2f}x-wall-cpu"
+                f";depth={speedups['seq_depth']}->{speedups['tp_depth']}"
+                f";tile={tile};log2tiles={int(math.log2(max(n_tiles, 2)))}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

@@ -29,14 +29,21 @@ from repro.core.decoder import ViterbiDecoder
 from repro.core.trellis import build_acs_tables
 from repro.core.viterbi import blocks_from_llrs, forward_fused, init_metric
 
+# row names come from AcsPrecision.label() so every knob that changes
+# the compiled program (incl. split_dot) gets its own BENCH json row
 COMBOS = [
-    ("C=f32,ch=f32", AcsPrecision()),
-    ("C=f32,ch=bf16", AcsPrecision(matmul_dtype=jnp.bfloat16,
-                                   channel_dtype=jnp.bfloat16)),
-    ("C=bf16,ch=f32", AcsPrecision(carry_dtype=jnp.bfloat16)),
-    ("C=bf16,ch=bf16", AcsPrecision(matmul_dtype=jnp.bfloat16,
-                                    carry_dtype=jnp.bfloat16,
-                                    channel_dtype=jnp.bfloat16)),
+    (p.label(), p)
+    for p in (
+        AcsPrecision(),
+        AcsPrecision(matmul_dtype=jnp.bfloat16, channel_dtype=jnp.bfloat16),
+        AcsPrecision(carry_dtype=jnp.bfloat16),
+        AcsPrecision(matmul_dtype=jnp.bfloat16, carry_dtype=jnp.bfloat16,
+                     channel_dtype=jnp.bfloat16),
+        # §Perf C5: bf16 branch metrics + f32 metric routing — labelled
+        # distinctly from the plain bf16 matmul row above
+        AcsPrecision(matmul_dtype=jnp.bfloat16, channel_dtype=jnp.bfloat16,
+                     split_dot=True),
+    )
 ]
 
 

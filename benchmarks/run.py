@@ -15,6 +15,9 @@ the perf trajectory is tracked across PRs:
   * bench_radix      — §V/§VIII-C (radix-2 vs radix-4 Q counts & timing)
   * bench_kernel     — Pallas ACS kernels vs oracle + survivor packing
                        + the one-pass HBM bytes-accessed report (§8)
+  * bench_latency    — §9 single-stream latency: sequential scan vs
+                       time-parallel (wall, HLO depth, modeled device
+                       latency) over F x T
   * roofline_report  — §Roofline summary from the dry-run artifacts
 """
 from __future__ import annotations
@@ -29,11 +32,15 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 
 _MBPS = re.compile(r"([0-9.]+)Mb/s")
 _BYTES = re.compile(r"bytes=([0-9]+)")
+_MODELED = re.compile(r"modeled=([0-9.]+)us")
+_DEPTH = re.compile(r"depth=([0-9]+)(?:->([0-9]+))?")
+_SPEEDUP = re.compile(r"([0-9.]+)x-modeled")
 
 
 def _artifact_rows(rows):
-    """CSV rows -> JSON rows, lifting tokens/s and bytes out of the
-    derived column where a suite reports them."""
+    """CSV rows -> JSON rows, lifting tokens/s, bytes and the latency
+    suite's modeled/depth fields out of the derived column where a
+    suite reports them."""
     out = []
     for name, us, derived in rows:
         row = {
@@ -47,6 +54,19 @@ def _artifact_rows(rows):
         m = _BYTES.search(row["derived"])
         if m:
             row["bytes_accessed"] = int(m.group(1))
+        m = _MODELED.search(row["derived"])
+        if m:
+            row["modeled_us"] = float(m.group(1))
+        m = _DEPTH.search(row["derived"])
+        if m:
+            if m.group(2):  # "depth=A->B" on speedup summary rows
+                row["seq_depth"] = int(m.group(1))
+                row["tp_depth"] = int(m.group(2))
+            else:  # a single row's own dependency depth
+                row["depth"] = int(m.group(1))
+        m = _SPEEDUP.search(row["derived"])
+        if m:
+            row["speedup_modeled"] = float(m.group(1))
         out.append(row)
     return out
 
@@ -66,6 +86,7 @@ def _write_artifact(suite: str, rows, fast: bool, out_dir: pathlib.Path):
                 "time_tile": kc.time_tile,
                 "pack_survivors": kc.pack_survivors,
                 "matmul_dtype": kc.matmul_dtype,
+                "transfer_tile": kc.transfer_tile,
             }
             for name, kc in vit.KERNEL_CONFIGS.items()
         },
@@ -89,6 +110,7 @@ def main() -> None:
     from benchmarks import (
         bench_ber,
         bench_kernel,
+        bench_latency,
         bench_radix,
         bench_throughput,
         roofline_report,
@@ -117,6 +139,10 @@ def main() -> None:
         "kernel": lambda: bench_kernel.bench(
             n_frames=128 if args.fast else 512,
             n_stages=32 if args.fast else 64,
+        ),
+        "latency": lambda: bench_latency.bench(
+            t_stages=(1 << 13, 1 << 15) if args.fast else (1 << 16, 1 << 19),
+            n_frames=(1, 4) if args.fast else (1, 4, 16),
         ),
         "roofline": roofline_report.bench,
     }

@@ -50,6 +50,8 @@ def wava_decode(
     use_kernel: bool = False,
     pack_survivors: bool = False,
     max_iters: int = DEFAULT_WAVA_ITERS,
+    time_parallel: bool = False,
+    transfer_tile: Optional[int] = None,
 ):
     """Decode (F, n, beta) tail-biting frames.  Returns (bits, converged):
     bits (F, n) int, converged (F,) bool — True where a tail-biting
@@ -61,6 +63,17 @@ def wava_decode(
     n must be divisible by tables.rho: the circular trellis has exactly n
     stages, so zero-LLR padding is NOT information-free here — callers
     with odd n should use rho=1 tables (ViterbiDecoder does this).
+
+    ``time_parallel`` swaps each circulation's FORWARD pass for the §9
+    transfer-matrix scan (``timeparallel_forward`` — plug-compatible:
+    same metrics, same survivors), cutting that pass's sequential depth
+    from n/rho to tile + log2(tiles).  The consistency probe still
+    needs the full survivor path, so each circulation's
+    ``traceback_with_state`` remains an n/rho-deep scan — per
+    circulation the depth roughly halves rather than dropping to log;
+    the full §9 parallel traceback applies only to open (non-circular)
+    decodes.  Falls back to the ordinary scan when the frame is too
+    short to tile.
     """
     precision = precision or AcsPrecision()
     F, n, beta = llrs.shape
@@ -72,13 +85,43 @@ def wava_decode(
             f"rho={tables.rho}; use rho=1 tables for odd lengths"
         )
     blocks = blocks_from_llrs(jnp.asarray(llrs), tables.rho)
+    tp_tile = None
+    if time_parallel:
+        # a caller-resolved tile (ViterbiDecoder passes the one its
+        # _time_parallel_tile plan picked) is trusted as-is; only
+        # standalone callers re-run the shared eligibility rule
+        if transfer_tile:
+            tp_tile = transfer_tile
+        else:
+            from repro.core.kernel_geometry import time_parallel_plan
+
+            tp_tile = time_parallel_plan(
+                F, blocks.shape[0], tables.n_states, True, None
+            )
+    prefix = None
+    if tp_tile is not None:
+        from repro.core.timeparallel import transfer_prefix
+
+        # formation + scan depend only on the blocks, not on the
+        # wrap-around entry metric: compute once, reuse per circulation
+        prefix = transfer_prefix(
+            blocks, tables, precision, tp_tile, use_kernel
+        )
     lam = init_metric(F, tables.n_states, None)  # uniform boundary prior
     done = jnp.zeros(F, dtype=bool)
     out = jnp.zeros((F, n), dtype=jnp.int32)
     for _ in range(max_iters):
-        lam, phis = forward_fused(
-            blocks, lam, tables, precision, use_kernel, pack_survivors
-        )
+        if tp_tile is not None:
+            from repro.core.timeparallel import timeparallel_forward
+
+            lam, phis = timeparallel_forward(
+                blocks, lam, tables, precision, tp_tile,
+                use_kernel, pack_survivors, prefix=prefix,
+            )
+        else:
+            lam, phis = forward_fused(
+                blocks, lam, tables, precision, use_kernel, pack_survivors
+            )
         fs = jnp.argmax(lam, axis=-1).astype(jnp.int32)
         start, bits = traceback_with_state(phis, fs, tables)
         consistent = start == fs

@@ -37,6 +37,10 @@ class ViterbiConfig:
     # per-cell tuned values live in KERNEL_CONFIGS (benchmarks/autotune.py)
     time_tile: Optional[int] = None
     block_frames: Optional[int] = None
+    # time-parallel decode (DESIGN.md §9): None = auto-select by shape;
+    # transfer_tile is the tuned matrix-scan tile (autotune sweep)
+    time_parallel: Optional[bool] = None
+    transfer_tile: Optional[int] = None
 
     @property
     def tiled(self) -> TiledDecoderConfig:
@@ -115,17 +119,21 @@ VITERBI_CELLS = {
 
 @dataclasses.dataclass(frozen=True)
 class KernelConfig:
-    """One-pass kernel geometry for a serving cell (DESIGN.md §8).
+    """Kernel geometry for a serving cell (DESIGN.md §8/§9).
 
     Produced by ``benchmarks/autotune.py`` (block_frames x time_tile x
-    pack x matmul_dtype sweep); ``apply_kernel_config`` threads it into a
-    ViterbiConfig so ``ViterbiDecoder.from_config`` picks it up.
+    pack x matmul_dtype sweep for the one-pass streaming kernel, plus a
+    transfer_tile x matmul_dtype sweep for the time-parallel matrix
+    scan); ``apply_kernel_config`` threads it into a ViterbiConfig so
+    ``ViterbiDecoder.from_config`` picks it up.
     """
 
     block_frames: int = 256
     time_tile: int = 32
     pack_survivors: bool = True
     matmul_dtype: str = "f32"  # "f32" | "bf16"
+    # §9 time-parallel matrix-scan tile; None = shape-derived default
+    transfer_tile: Optional[int] = None
 
     def overrides(self) -> dict:
         return dict(
@@ -133,18 +141,19 @@ class KernelConfig:
             time_tile=self.time_tile,
             pack_survivors=self.pack_survivors,
             channel_bf16=self.matmul_dtype == "bf16",
+            transfer_tile=self.transfer_tile,
         )
 
 
 # --- autotune: begin (written by `python -m benchmarks.autotune --apply`;
 #     do not edit inside this block by hand) ---
 KERNEL_CONFIGS = {
-    # streaming cells: packed VMEM ring, tuned by benchmarks.autotune
-    "decode_1m": KernelConfig(256, 16, True, "bf16"),
-    "decode_64k": KernelConfig(256, 32, True, "bf16"),
-    "decode_64k_dvb_r78": KernelConfig(256, 32, True, "f32"),
-    "decode_64k_wifi_r34": KernelConfig(256, 16, True, "bf16"),
-    "decode_gsm_bursts": KernelConfig(256, 32, True, "f32"),
+    # streaming cells: packed VMEM ring + §9 transfer tile, tuned by benchmarks.autotune
+    "decode_1m": KernelConfig(256, 32, True, "f32", transfer_tile=512),
+    "decode_64k": KernelConfig(256, 32, True, "bf16", transfer_tile=128),
+    "decode_64k_dvb_r78": KernelConfig(256, 16, True, "f32", transfer_tile=512),
+    "decode_64k_wifi_r34": KernelConfig(256, 32, True, "f32", transfer_tile=128),
+    "decode_gsm_bursts": KernelConfig(128, 64, True, "f32", transfer_tile=114),
 }
 # --- autotune: end ---
 

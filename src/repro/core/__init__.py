@@ -19,6 +19,13 @@ from .viterbi import (  # noqa: F401
     traceback,
     traceback_with_state,
 )
+from .timeparallel import (  # noqa: F401
+    decode_time_parallel,
+    prefix_entry_metrics,
+    timeparallel_forward,
+    transfer_matrices,
+    tropical_matmul,
+)
 from .decoder import (  # noqa: F401
     DEFAULT_DECISION_DEPTH,
     StreamState,

@@ -1,0 +1,45 @@
+"""Backend probes shared by the pallas-free decision layer and the kernels.
+
+``kernels.viterbi_acs`` and ``core.kernel_geometry`` both need to ask
+"what is this process actually running on?" — the kernels to decide
+between Mosaic lowering and interpret-mode emulation, the geometry rules
+to decide whether a device has idle lanes worth spending extra work on
+(the time-parallel auto-select, DESIGN.md §9).  Keeping the probes here
+means ``repro.core`` never imports ``jax.experimental.pallas`` at module
+load, and the two consumers cannot drift apart.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["on_tpu", "resolve_interpret", "device_underfill_rows"]
+
+
+def on_tpu() -> bool:
+    """True when the default backend compiles Pallas to Mosaic (TPU)."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """``interpret=None`` means auto: emulate everywhere but on TPU.
+
+    The old ``interpret=True`` default was a perf footgun — any caller
+    that forgot the flag silently ran the Python emulation on TPU.
+    """
+    return not on_tpu() if interpret is None else bool(interpret)
+
+
+# MXU/lane rows an accelerator keeps busy before frames-only batching
+# saturates it: 8 cores x 128 lanes.  Below this, trading S x more
+# (perfectly parallel) work for a log-depth dependency chain is a
+# latency win; a CPU has no idle lanes to trade into, so the budget is 0
+# and the time-parallel path only engages when explicitly requested.
+_ACCEL_ROW_BUDGET = 1024
+
+
+def device_underfill_rows() -> int:
+    """Parallel-row budget of the current backend for auto-selecting the
+    time-parallel decode path (DESIGN.md §9): shapes with
+    ``n_frames * n_states`` at or under this budget leave most of an
+    accelerator idle under frames-only parallelism."""
+    return _ACCEL_ROW_BUDGET if jax.default_backend() in ("tpu", "gpu") else 0

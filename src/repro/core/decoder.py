@@ -50,12 +50,13 @@ from .viterbi import (
     traceback,
 )
 
-from .kernel_geometry import (  # pallas-free §8 geometry rules
+from .kernel_geometry import (  # pallas-free §8/§9 geometry rules
     DEFAULT_BLOCK_FRAMES,
     one_pass_time_tile,
     ring_auto_packed,
     ring_dtype,
     ring_words,
+    time_parallel_plan,
 )
 
 __all__ = ["StreamState", "ViterbiDecoder", "DEFAULT_DECISION_DEPTH"]
@@ -196,6 +197,8 @@ class ViterbiDecoder:
         one_pass: Optional[bool] = None,
         time_tile: Optional[int] = None,
         block_frames: Optional[int] = None,
+        time_parallel: Optional[bool] = None,
+        transfer_tile: Optional[int] = None,
     ):
         if decision_depth % rho:
             raise ValueError(
@@ -223,6 +226,11 @@ class ViterbiDecoder:
         self.one_pass = use_kernel if one_pass is None else bool(one_pass)
         self.time_tile = time_tile
         self.block_frames = block_frames
+        # time-parallel decode (DESIGN.md §9): None = auto-select per
+        # call shape via kernel_geometry.time_parallel_plan (engages
+        # only when frames-only batching underfills the device)
+        self.time_parallel = time_parallel
+        self.transfer_tile = transfer_tile
         # the streaming survivor ring is ALWAYS bit-packed when the state
         # count allows it and one-pass is on (the paper's 32-bit output
         # compaction is part of the §8 ring design); batch/tail-biting
@@ -253,6 +261,8 @@ class ViterbiDecoder:
         one_pass: Optional[bool] = None,
         time_tile: Optional[int] = None,
         block_frames: Optional[int] = None,
+        time_parallel: Optional[bool] = None,
+        transfer_tile: Optional[int] = None,
     ) -> "ViterbiDecoder":
         """One front door for every deployed standard (DESIGN.md §7):
         resolves a ``repro.codes.registry`` entry — mother code, puncture
@@ -274,6 +284,8 @@ class ViterbiDecoder:
             one_pass=one_pass,
             time_tile=time_tile,
             block_frames=block_frames,
+            time_parallel=time_parallel,
+            transfer_tile=transfer_tile,
         )
 
     @classmethod
@@ -312,6 +324,8 @@ class ViterbiDecoder:
             termination=termination,
             time_tile=getattr(vcfg, "time_tile", None),
             block_frames=getattr(vcfg, "block_frames", None),
+            time_parallel=getattr(vcfg, "time_parallel", None),
+            transfer_tile=getattr(vcfg, "transfer_tile", None),
         )
 
     # -- rate matching ----------------------------------------------------
@@ -334,12 +348,28 @@ class ViterbiDecoder:
 
     # -- batch ------------------------------------------------------------
 
+    def _time_parallel_tile(
+        self, n_frames: int, t_steps: int, time_parallel: Optional[bool]
+    ) -> Optional[int]:
+        """Transfer tile for the §9 time-parallel path on this shape, or
+        None to stay sequential — per-call override beats the decoder
+        default, then the shared ``time_parallel_plan`` eligibility
+        (tile grid + device underfill auto-select)."""
+        resolved = (
+            self.time_parallel if time_parallel is None else time_parallel
+        )
+        return time_parallel_plan(
+            n_frames, t_steps, self.spec.n_states,
+            resolved, self.transfer_tile,
+        )
+
     def decode_batch(
         self,
         llrs: jnp.ndarray,
         initial_state: Optional[int] = 0,
         final_state: Optional[int] = None,
         termination: Optional[str] = None,
+        time_parallel: Optional[bool] = None,
     ) -> jnp.ndarray:
         """One-shot decode of independent frames.
 
@@ -351,11 +381,19 @@ class ViterbiDecoder:
         estimated).  n not divisible by rho is zero-LLR padded internally
         (information-free) unless a final-state pin would land on the
         padding.
+
+        ``time_parallel`` (None = decoder default, which defaults to
+        auto) decodes via the §9 transfer-matrix associative scan —
+        identical bits, O(tile + log2 tiles) sequential depth instead of
+        n/rho — when the frame batch underfills the device (small-F /
+        large-T serving) or on request.
         """
         term = termination or self.termination
         llrs = self.depunctured(llrs)
         if term == "tailbiting":
-            return self.decode_tailbiting(llrs)[0]
+            return self.decode_tailbiting(
+                llrs, time_parallel=time_parallel
+            )[0]
         F, n, _ = llrs.shape
         pad = (-n) % self.rho
         if pad:
@@ -365,34 +403,59 @@ class ViterbiDecoder:
                     f"got n={n} (the pin would land on padded stages)"
                 )
             llrs = jnp.pad(llrs, ((0, 0), (0, pad), (0, 0)))
-        out = decode_frames(
-            llrs,
-            self.spec,
-            rho=self.rho,
-            initial_state=initial_state,
-            final_state=final_state,
-            precision=self.precision,
-            use_kernel=self.use_kernel,
-            pack_survivors=self.pack_survivors,
+        tp_tile = self._time_parallel_tile(
+            F, (n + pad) // self.rho, time_parallel
         )
+        if tp_tile is not None:
+            from .timeparallel import decode_time_parallel
+
+            out = decode_time_parallel(
+                llrs,
+                self.spec,
+                rho=self.rho,
+                initial_state=initial_state,
+                final_state=final_state,
+                precision=self.precision,
+                transfer_tile=tp_tile,
+                use_kernel=self.use_kernel,
+                pack_survivors=self.pack_survivors,
+            )
+        else:
+            out = decode_frames(
+                llrs,
+                self.spec,
+                rho=self.rho,
+                initial_state=initial_state,
+                final_state=final_state,
+                precision=self.precision,
+                use_kernel=self.use_kernel,
+                pack_survivors=self.pack_survivors,
+            )
         return out[:, :n] if pad else out
 
     def decode_tailbiting(
-        self, llrs: jnp.ndarray, max_iters: Optional[int] = None
+        self,
+        llrs: jnp.ndarray,
+        max_iters: Optional[int] = None,
+        time_parallel: Optional[bool] = None,
     ):
         """Wrap-around (WAVA) decode of tail-biting frames (DESIGN.md §7).
 
         llrs as in ``decode_batch``.  Returns (bits (F, n), converged
         (F,) bool).  Frame lengths not divisible by rho fall back to
-        radix-2 tables — the circular trellis cannot be padded.
+        radix-2 tables — the circular trellis cannot be padded.  With
+        ``time_parallel`` each WAVA circulation runs the §9 scan.
         """
         from repro.codes.tailbiting import DEFAULT_WAVA_ITERS, wava_decode
 
         llrs = self.depunctured(llrs)
-        n = llrs.shape[1]
+        F, n = llrs.shape[0], llrs.shape[1]
         tables = (
             self.tables if n % self.rho == 0
             else build_acs_tables(self.spec, 1)
+        )
+        tp_tile = self._time_parallel_tile(
+            F, n // tables.rho, time_parallel
         )
         return wava_decode(
             llrs,
@@ -401,6 +464,8 @@ class ViterbiDecoder:
             use_kernel=self.use_kernel,
             pack_survivors=self.pack_survivors,
             max_iters=max_iters or DEFAULT_WAVA_ITERS,
+            time_parallel=tp_tile is not None,
+            transfer_tile=tp_tile,
         )
 
     # -- tiled stream (stateless, latency-optimal) ------------------------
@@ -453,6 +518,8 @@ class ViterbiDecoder:
             one_pass=self.one_pass,
             time_tile=self.time_tile,
             block_frames=self.block_frames,
+            time_parallel=self.time_parallel,
+            transfer_tile=self.transfer_tile,
         )
 
     # -- stateful chunked streaming (throughput-optimal) ------------------

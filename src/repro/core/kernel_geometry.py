@@ -17,14 +17,20 @@ import jax.numpy as jnp
 __all__ = [
     "DEFAULT_BLOCK_FRAMES",
     "DEFAULT_TIME_TILE",
+    "DEFAULT_TRANSFER_TILE",
     "FUSED_RING_VMEM_BUDGET",
     "MIN_ONE_PASS_TILE",
+    "MIN_TIME_PARALLEL_TILES",
     "ring_words",
     "ring_dtype",
     "ring_auto_packed",
     "pick_time_tile",
     "one_pass_time_tile",
     "fused_ring_vmem_bytes",
+    "default_transfer_tile",
+    "pick_transfer_tile",
+    "time_parallel_plan",
+    "transfer_tile_vmem_bytes",
 ]
 
 DEFAULT_BLOCK_FRAMES = 256
@@ -39,6 +45,12 @@ FUSED_RING_VMEM_BUDGET = 12 * 2**20
 # traceback per tiny tile): both streaming entry points fall back to the
 # two-pass step instead — keep their criteria in sync via this constant
 MIN_ONE_PASS_TILE = 8
+
+# time-parallel decode (DESIGN.md §9): target steps per transfer-matrix
+# tile, and the tile count below which a matrix scan has nothing to
+# parallelize (the sequential path is already that shallow)
+DEFAULT_TRANSFER_TILE = 64
+MIN_TIME_PARALLEL_TILES = 4
 
 
 def ring_words(n_states: int, pack_survivors: bool) -> int:
@@ -92,6 +104,84 @@ def fused_ring_vmem_bytes(
         * block_frames
         * ring_words(n_states, pack_survivors)
         * itemsize
+    )
+
+
+def default_transfer_tile(t_steps: int) -> int:
+    """Shape-derived transfer-tile target ~ sqrt(T'): balances the tile
+    depth (formation/recovery loops) against the scan size (n_tiles S x S
+    composes) — the right neighbourhood on every backend; the autotuner
+    refines it per cell."""
+    target = 1
+    while target * target < t_steps:
+        target *= 2
+    return max(DEFAULT_TRANSFER_TILE, min(target, 2048))
+
+
+def pick_transfer_tile(t_steps: int, target=None) -> int:
+    """Largest divisor of ``t_steps`` <= ``target`` (default: the
+    sqrt-scaled ``default_transfer_tile``) — transfer-matrix tiles must
+    tile the step axis exactly (a zero-LLR remainder pad would perturb
+    the final metrics, unlike the one-pass ring which carries state
+    across ragged chunks).  Always >= 1."""
+    return pick_time_tile(
+        t_steps, t_steps, target or default_transfer_tile(t_steps)
+    )
+
+
+def time_parallel_plan(
+    n_frames: int,
+    t_steps: int,
+    n_states: int,
+    time_parallel=None,
+    transfer_tile=None,
+    underfill_rows=None,
+):
+    """Shared time-parallel eligibility (DESIGN.md §9) for every decode
+    entry point: the transfer tile (in radix steps) to decode with, or
+    None when the shape should stay on the sequential scan.
+
+    ``time_parallel=False`` forces sequential; ``True`` engages whenever
+    a usable tile grid exists; ``None`` auto-selects — engage only when
+    ``n_frames * n_states`` fits the device's idle-row budget
+    (``backend.device_underfill_rows``; small-F/large-T serving), since
+    the transfer-matrix formation multiplies the perfectly-parallel work
+    by S to cut the sequential depth from T' to tile + log2(tiles).
+    """
+    if time_parallel is False:
+        return None
+    if t_steps <= 0 or n_frames <= 0:
+        return None
+    tt = pick_transfer_tile(t_steps, transfer_tile)
+    if tt < 2 or t_steps // tt < MIN_TIME_PARALLEL_TILES:
+        return None
+    if time_parallel:
+        return tt
+    if underfill_rows is None:
+        from .backend import device_underfill_rows
+
+        underfill_rows = device_underfill_rows()
+    return tt if n_frames * n_states <= underfill_rows else None
+
+
+def transfer_tile_vmem_bytes(
+    time_tile: int,
+    block_frames: int,
+    n_states: int,
+    llr_block: int,
+    n_slots: int,
+    matmul_itemsize: int = 4,
+) -> int:
+    """VMEM footprint of one ``transfer_matrix_pallas`` program: the
+    tile's LLR blocks, the (BF*S, S) matrix carry, the stacked operand W
+    and the (BF*S, S*R) potentials — the term that bounds usable
+    transfer tiles on-chip (DESIGN.md §9 table)."""
+    rows = block_frames * n_states
+    return (
+        time_tile * block_frames * llr_block * matmul_itemsize  # blocks
+        + rows * n_states * 4  # matrix carry (f32)
+        + (llr_block + n_states) * n_states * n_slots * matmul_itemsize  # W
+        + rows * n_states * n_slots * 4  # potentials (f32 accumulate)
     )
 
 

@@ -38,12 +38,14 @@ from .kernel_geometry import (  # noqa: F401 — pallas-free geometry + re-expor
     ring_auto_packed,
     ring_dtype,
     ring_words,
+    time_parallel_plan,
 )
 from .trellis import AcsTables, CodeSpec, build_acs_tables
 
 __all__ = [
     "AcsPrecision",
     "forward_fused",
+    "fused_potentials",
     "traceback",
     "traceback_with_state",
     "decode_frames",
@@ -69,11 +71,49 @@ class AcsPrecision:
     # renorm can be dropped without the bf16xno-renorm BER interaction
 
     def label(self) -> str:
+        """Unique name for BENCH rows: every knob that changes the
+        compiled program is encoded, so e.g. split_dot on/off never
+        aliases to the same row name."""
         short = {jnp.float32: "f32", jnp.bfloat16: "bf16", jnp.float16: "f16"}
-        return (
-            f"C={short.get(self.carry_dtype, self.carry_dtype)}"
-            f",ch={short.get(self.channel_dtype, self.channel_dtype)}"
+        parts = [
+            f"C={short.get(self.carry_dtype, self.carry_dtype)}",
+            f"mm={short.get(self.matmul_dtype, self.matmul_dtype)}",
+            f"ch={short.get(self.channel_dtype, self.channel_dtype)}",
+        ]
+        if self.split_dot:
+            parts.append("split")
+        if not self.renorm:
+            parts.append("norenorm")
+        return ",".join(parts)
+
+
+def fused_potentials(
+    l_t: jnp.ndarray,  # (rows, B) LLR block
+    lam: jnp.ndarray,  # (rows, S) path metrics
+    w: jnp.ndarray,  # (B+S, S*R) stacked [Theta^T ; P]
+    w_theta: jnp.ndarray,  # (B, S*R)
+    w_pred: jnp.ndarray,  # (S, S*R) f32 one-hot
+    precision: AcsPrecision,
+) -> jnp.ndarray:
+    """One fused-ACS matmul (DESIGN.md §2): branch metrics + path-metric
+    routing in a single MXU op, f32 accumulation.  Shared by the
+    sequential scan and the §9 transfer-matrix formation so the two
+    paths quantize identically.  Returns (rows, S*R) f32 potentials."""
+    if precision.split_dot:
+        return jnp.dot(
+            l_t.astype(precision.matmul_dtype),
+            w_theta,
+            preferred_element_type=jnp.float32,
+        ) + jnp.dot(
+            lam.astype(jnp.float32), w_pred,
+            preferred_element_type=jnp.float32,
         )
+    x = jnp.concatenate(
+        [l_t.astype(precision.matmul_dtype),
+         lam.astype(precision.matmul_dtype)],
+        axis=1,
+    )
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
 
 
 def blocks_from_llrs(llrs: jnp.ndarray, rho: int) -> jnp.ndarray:
@@ -134,24 +174,7 @@ def forward_fused(
     bits = {2: 1, 4: 2, 8: 3, 16: 4}[R]
 
     def step(lam, l_t):
-        if precision.split_dot:
-            pot = jnp.dot(
-                l_t.astype(precision.matmul_dtype),
-                W_theta,
-                preferred_element_type=jnp.float32,
-            ) + jnp.dot(
-                lam.astype(jnp.float32), W_pred,
-                preferred_element_type=jnp.float32,
-            )
-        else:
-            x = jnp.concatenate(
-                [l_t.astype(precision.matmul_dtype),
-                 lam.astype(precision.matmul_dtype)],
-                axis=1,
-            )
-            pot = jnp.dot(
-                x, W, preferred_element_type=jnp.float32
-            )  # MXU: f32 accumulate
+        pot = fused_potentials(l_t, lam, W, W_theta, W_pred, precision)
         pot = pot.reshape(lam.shape[0], S, R)
         new_lam = jnp.max(pot, axis=-1)
         phi = jnp.argmax(pot, axis=-1)
@@ -357,6 +380,8 @@ def tiled_decode_stream(
     one_pass: bool = False,
     time_tile: Optional[int] = None,
     block_frames: Optional[int] = None,
+    time_parallel: Optional[bool] = None,
+    transfer_tile: Optional[int] = None,
 ) -> jnp.ndarray:
     """Decode one long LLR stream (n, beta) via overlapping parallel frames.
 
@@ -373,6 +398,18 @@ def tiled_decode_stream(
     within the overlap — the same assumption window stitching itself
     makes.  Falls back to two-pass when the overlap is not on the rho
     grid (the ring needs whole radix steps) or states cannot be packed.
+
+    ``time_parallel`` (None = auto) additionally routes the window ACS
+    through the §9 transfer-matrix scan — the small-window-count /
+    long-window regime (large ``frame_len`` configs) where frames-only
+    batching leaves the accelerator idle.  The auto rule is the shared
+    ``time_parallel_plan`` one: engage when ``n_windows * n_states``
+    fits the device's idle-row budget (n_states being the formation
+    work multiplier) AND the window tiles usefully; the window decode
+    then runs in O(tile + log2 tiles) sequential depth instead of
+    window/rho.  Precedence: an EXPLICIT ``time_parallel=True`` beats
+    the one-pass kernel plan; on auto, an eligible one-pass plan wins
+    (same depth class per window, none of the S x formation work).
     """
     n, beta = llrs.shape
     f, v = cfg.frame_len, cfg.overlap
@@ -383,26 +420,48 @@ def tiled_decode_stream(
     padded = jnp.pad(jnp.asarray(llrs), ((pad_lo, pad_hi), (0, 0)))
     idx = jnp.arange(n_frames)[:, None] * f + jnp.arange(cfg.window)[None, :]
     frames = padded[idx]  # (n_frames, window, beta)
+    tp_tile = time_parallel_plan(
+        n_frames, cfg.window // cfg.rho, spec.n_states,
+        time_parallel, transfer_tile,
+    )
     plan = (
         _one_pass_window_plan(
             spec, cfg, pack_survivors, time_tile, block_frames
         )
         if one_pass else None
     )
-    if plan is not None:
+    # an explicitly requested time-parallel path beats the one-pass
+    # kernel; on auto, an eligible one-pass plan wins (same per-window
+    # depth class without the S x formation work)
+    if plan is not None and not (time_parallel is True and tp_tile):
         center = _one_pass_windows(
             frames, spec, cfg, precision, plan[0], plan[1], block_frames,
         )
         return center.reshape(-1)[:n]
-    decoded = decode_frames(
-        frames,
-        spec,
-        rho=cfg.rho,
-        initial_state=None,
-        final_state=None,
-        precision=precision,
-        use_kernel=use_kernel,
-        pack_survivors=pack_survivors,
-    )
+    if tp_tile is not None:
+        from .timeparallel import decode_time_parallel
+
+        decoded = decode_time_parallel(
+            frames,
+            spec,
+            rho=cfg.rho,
+            initial_state=None,
+            final_state=None,
+            precision=precision,
+            transfer_tile=tp_tile,
+            use_kernel=use_kernel,
+            pack_survivors=pack_survivors,
+        )
+    else:
+        decoded = decode_frames(
+            frames,
+            spec,
+            rho=cfg.rho,
+            initial_state=None,
+            final_state=None,
+            precision=precision,
+            use_kernel=use_kernel,
+            pack_survivors=pack_survivors,
+        )
     center = decoded[:, v : v + f]  # (n_frames, f)
     return center.reshape(-1)[:n]

@@ -11,15 +11,24 @@ bit-identical to one device by construction, and the Pallas kernel path
 (``use_kernel=True``) drops in unchanged because each shard calls it on
 a local (T, F/ndev, B) block.
 
-Both serving shapes are covered:
+Three serving shapes are covered:
   * ``sharded_decode_frames``  — (F, n, beta) independent frames,
     frame axis sharded (the decode_batch path);
   * ``sharded_decode_streams`` — (N, n, beta) long streams, stream axis
     sharded, each device running the tiled window decoder locally (the
-    serve/step.py path).
+    serve/step.py path);
+  * ``sharded_decode_time_parallel`` — (F, n, beta) with the TIME axis
+    sharded (DESIGN.md §9): each device forms and scans the transfer
+    matrices of its own span of tiles, ONE all-gather of per-device
+    (S, S) prefix products stitches the spans, and every device recovers
+    its survivors/bits locally.  This is the long-single-stream serving
+    shape frame-sharding cannot touch: F < n_devices, latency bounded by
+    tile + log2(tiles) per device instead of T.
 
 Frame counts that do not divide the device count are zero-LLR padded
-(a zero LLR is information-free) and the padding is sliced off.
+(a zero LLR is information-free) and the padding is sliced off.  The
+time-sharded path instead REQUIRES the step count to divide evenly:
+a zero-LLR tail pad would perturb the final metrics.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.kernel_geometry import pick_transfer_tile
 from repro.core.trellis import CodeSpec, build_acs_tables
 from repro.core.viterbi import (
     AcsPrecision,
@@ -47,6 +57,7 @@ __all__ = [
     "frame_mesh",
     "sharded_decode_frames",
     "sharded_decode_streams",
+    "sharded_decode_time_parallel",
 ]
 
 
@@ -199,3 +210,140 @@ def sharded_decode_streams(
         one_pass, time_tile, block_frames,
     )
     return fn(llrs)[:N]
+
+
+@functools.lru_cache(maxsize=32)
+def _time_parallel_fn(
+    spec: CodeSpec,
+    rho: int,
+    mesh: Mesh,
+    axis: str,
+    transfer_tile: int,
+    initial_state: Optional[int],
+    final_state: Optional[int],
+    precision: AcsPrecision,
+    use_kernel: bool,
+    pack_survivors: bool,
+):
+    from repro.core import timeparallel as tp
+
+    tables = build_acs_tables(spec, rho)
+    n_dev = mesh.shape[axis]
+    S = spec.n_states
+
+    def compose(a, b):
+        return tp.tropical_matmul(a, b, precision.matmul_dtype)
+
+    def local(blocks_loc):  # (T'/n_dev, F, B) — this device's time span
+        t_loc, F, B = blocks_loc.shape
+        n_loc = t_loc // transfer_tile
+        idx = jax.lax.axis_index(axis)
+        eye = jnp.broadcast_to(tp.tropical_identity(S), (F, S, S))
+        lam0 = init_metric(F, S, initial_state)
+
+        # -- local formation + prefix scan, then ONE all-gather of the
+        # per-device (F, S, S) span products stitches the spans --------
+        m = tp.transfer_matrices(
+            blocks_loc, tables, precision, transfer_tile,
+            use_kernel=use_kernel,
+        )
+        prefix = jax.lax.associative_scan(compose, m, axis=0)
+        tots = jax.lax.all_gather(prefix[-1], axis)  # (n_dev, F, S, S)
+        # exclusive prefix over devices, replicated fold (n_dev is tiny)
+        acc = eye
+        for d in range(n_dev - 1):
+            acc = jnp.where(d < idx, compose(acc, tots[d]), acc)
+        v0 = jnp.max(lam0[:, :, None] + acc, axis=-2)  # device entry (F, S)
+        entry = tp.entry_from_prefix(prefix, v0)  # (n_loc, F, S)
+
+        # -- local recovery: every tile re-runs the fused ACS from its
+        # exact entry metric, tiles folded into the lane axis ----------
+        tiles = tp.tiled_blocks(blocks_loc, transfer_tile)
+        lam_fin, phis = forward_fused(
+            tiles.reshape(transfer_tile, n_loc * F, B),
+            entry.reshape(n_loc * F, S),
+            tables, precision, use_kernel, pack_survivors,
+        )
+        lam_fin = lam_fin.reshape(n_loc, F, S)
+        lam_ends = jax.lax.all_gather(lam_fin[-1], axis)  # (n_dev, F, S)
+        if final_state is None:
+            fs = jnp.argmax(lam_ends[-1], axis=-1).astype(jnp.int32)
+        else:
+            fs = jnp.full((F,), final_state, jnp.int32)
+
+        # -- boundary states: local suffix scan x device-suffix fold ---
+        suffix = jax.lax.associative_scan(
+            lambda a, b: compose(b, a), m, axis=0, reverse=True
+        )
+        acc2 = eye
+        for d in range(n_dev - 1, 0, -1):
+            acc2 = jnp.where(d > idx, compose(tots[d], acc2), acc2)
+        w_end = jnp.take_along_axis(
+            acc2, fs[:, None, None].astype(jnp.int32).repeat(S, 1), axis=-1
+        )[..., 0]  # (F, S): best s-at-device-end -> fs
+        v = jnp.max(suffix + w_end[None, :, None, :], axis=-1)
+        starts = jnp.argmax(entry + v, axis=-1).astype(jnp.int32)
+        starts0 = jax.lax.all_gather(starts[0], axis)  # (n_dev, F)
+        nxt = jnp.take(
+            starts0, jnp.minimum(idx + 1, n_dev - 1), axis=0
+        )
+        dev_exit = jnp.where(idx == n_dev - 1, fs, nxt)
+        exits = jnp.concatenate([starts[1:], dev_exit[None]], axis=0)
+
+        bits = traceback(phis, exits.reshape(n_loc * F), tables)
+        return bits.reshape(n_loc, F, transfer_tile * rho).transpose(
+            1, 0, 2
+        ).reshape(F, t_loc * rho)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=P(axis),
+            out_specs=P(None, axis),
+            check_rep=False,
+        )
+    )
+
+
+def sharded_decode_time_parallel(
+    llrs: jnp.ndarray,
+    spec: CodeSpec,
+    rho: int = 2,
+    mesh: Optional[Mesh] = None,
+    axis: str = "tiles",
+    initial_state: Optional[int] = None,
+    final_state: Optional[int] = None,
+    precision: Optional[AcsPrecision] = None,
+    transfer_tile: Optional[int] = None,
+    use_kernel: bool = False,
+    pack_survivors: bool = False,
+) -> jnp.ndarray:
+    """Time-sharded decode (DESIGN.md §9): llrs (F, n, beta) -> (F, n)
+    with the transfer-matrix TILE axis spread over ``mesh``.
+
+    Each device runs formation + associative scan + recovery on its own
+    contiguous span; the only cross-device traffic is one all-gather of
+    the per-device (S, S) span products (plus two vector-sized gathers
+    for the final metric and boundary states).  Bits equal the
+    single-device time-parallel path, which equals the sequential scan
+    — the same exactness story, now with T sharded.  n must put a whole
+    number of tiles on every device.
+    """
+    mesh = mesh or frame_mesh(axis=axis)
+    n_dev = mesh.shape[axis]
+    llrs = jnp.asarray(llrs)
+    F, n, _ = llrs.shape
+    blocks = blocks_from_llrs(llrs, rho)
+    t_steps = blocks.shape[0]
+    if t_steps % n_dev:
+        raise ValueError(
+            f"T'={t_steps} steps not divisible by {n_dev} devices — a "
+            "zero-LLR tail pad would perturb the final metrics"
+        )
+    tile = pick_transfer_tile(t_steps // n_dev, transfer_tile)
+    fn = _time_parallel_fn(
+        spec, rho, mesh, axis, tile, initial_state, final_state,
+        precision or AcsPrecision(), use_kernel, pack_survivors,
+    )
+    return fn(blocks)

@@ -21,7 +21,7 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HloCost", "analyze_hlo"]
+__all__ = ["HloCost", "analyze_hlo", "max_trip_count", "total_trip_count"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -208,6 +208,28 @@ def _dot_flops(ins: Instr, table: Dict[str, Instr]) -> float:
                 if d != "" and int(d) < len(dims):
                     contracted *= dims[int(d)]
     return 2.0 * ins.result_elems * contracted
+
+
+def max_trip_count(text: str) -> int:
+    """Largest ``known_trip_count`` of any while loop in the module — the
+    program's sequential-dependency depth in loop iterations (1 if the
+    program has no loops).  Used by the latency bench (DESIGN.md §9) to
+    verify the time-parallel depth reduction on the lowered HLO: the
+    sequential scan carries a T'-trip loop, the time-parallel decode's
+    longest loop is one transfer tile (the associative scan unrolls into
+    log2(n_tiles) levels, not a loop).  The programs measured here do
+    not nest loops, so the max IS the critical path."""
+    return max(
+        (int(m.group(1)) for m in _TRIP.finditer(text)), default=1
+    )
+
+
+def total_trip_count(text: str) -> int:
+    """Sum of every while loop's trip count — the total dependent-step
+    chain when the program's loops run back to back (the §9 decode's
+    formation / recovery / traceback loops do; none of the measured
+    programs nest loops)."""
+    return sum(int(m.group(1)) for m in _TRIP.finditer(text)) or 1
 
 
 def analyze_hlo(text: str) -> HloCost:

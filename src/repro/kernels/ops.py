@@ -18,11 +18,13 @@ from .viterbi_acs import (
     acs_decode_fused_pallas,
     acs_forward_pallas,
     on_tpu,
+    transfer_matrix_pallas,
 )
 
 __all__ = [
     "viterbi_forward",
     "viterbi_decode_fused",
+    "viterbi_transfer_matrices",
     "ring_words",
     "ring_dtype",
     "on_tpu",
@@ -114,5 +116,36 @@ def viterbi_decode_fused(
         matmul_dtype=precision.matmul_dtype,
         renorm=precision.renorm,
         pack_survivors=pack_survivors,
+        interpret=interpret,
+    )
+
+
+def viterbi_transfer_matrices(
+    blocks: jnp.ndarray,  # (T', F, B), T' divisible by transfer_tile
+    tables: AcsTables,
+    precision=None,
+    *,
+    transfer_tile: int,
+    block_frames: int = 0,
+    interpret=None,
+):
+    """Pallas-backed transfer-matrix formation (DESIGN.md §9): tile
+    tropical transfer matrices M (N, F, S, S) f32, built and composed in
+    VMEM — plug-compatible with ``core.timeparallel.transfer_matrices``
+    and selected there via ``use_kernel=True``."""
+    from repro.core.viterbi import AcsPrecision
+
+    precision = precision or AcsPrecision()
+    w = jnp.asarray(tables.fused_w)
+    return transfer_matrix_pallas(
+        blocks.astype(precision.channel_dtype),
+        w,
+        n_states=tables.n_states,
+        n_slots=tables.n_slots,
+        transfer_tile=transfer_tile,
+        block_frames=block_frames,
+        carry_dtype=precision.carry_dtype,
+        matmul_dtype=precision.matmul_dtype,
+        split_dot=precision.split_dot,
         interpret=interpret,
     )

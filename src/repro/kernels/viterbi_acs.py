@@ -55,11 +55,13 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "acs_forward_pallas",
     "acs_decode_fused_pallas",
+    "transfer_matrix_pallas",
     "unpack_survivors",
     "on_tpu",
     "ring_words",
     "ring_dtype",
     "pick_time_tile",
+    "pick_transfer_tile",
     "one_pass_time_tile",
     "fused_ring_vmem_bytes",
     "DEFAULT_BLOCK_FRAMES",
@@ -67,8 +69,13 @@ __all__ = [
     "FUSED_RING_VMEM_BUDGET",
 ]
 
-# geometry (ring layout, tile eligibility, VMEM budget) is shared with
-# the pallas-free decoder front door — single source of truth there
+# backend probes + geometry (ring layout, tile eligibility, VMEM budget)
+# are shared with the pallas-free decoder front door — single source of
+# truth in repro.core.backend / repro.core.kernel_geometry
+from repro.core.backend import (  # noqa: E402 — shared backend probes
+    on_tpu,
+    resolve_interpret as _resolve_interpret,
+)
 from repro.core.kernel_geometry import (  # noqa: E402,F401 — re-exports
     DEFAULT_BLOCK_FRAMES,
     DEFAULT_TIME_TILE,
@@ -77,26 +84,13 @@ from repro.core.kernel_geometry import (  # noqa: E402,F401 — re-exports
     fused_ring_vmem_bytes,
     one_pass_time_tile,
     pick_time_tile,
+    pick_transfer_tile,
     ring_auto_packed,
     ring_dtype,
     ring_words,
 )
 
 _SLOT_BITS = {2: 1, 4: 2, 8: 3, 16: 4}  # slot width in bits per radix
-
-
-def on_tpu() -> bool:
-    """True when the default backend compiles Pallas to Mosaic (TPU)."""
-    return jax.default_backend() == "tpu"
-
-
-def _resolve_interpret(interpret):
-    """``interpret=None`` means auto: emulate everywhere but on TPU.
-
-    The old ``interpret=True`` default was a perf footgun — any caller
-    that forgot the flag silently ran the Python emulation on TPU.
-    """
-    return not on_tpu() if interpret is None else bool(interpret)
 
 
 def _pack_phi(phi: jnp.ndarray, n_states: int, bits: int) -> jnp.ndarray:
@@ -526,19 +520,166 @@ def acs_decode_fused_pallas(
     return bits, lam_out, hist_out
 
 
-def fused_ring_vmem_bytes(
-    depth_steps: int,
-    time_tile: int,
-    block_frames: int,
+# ---------------------------------------------------------------------------
+# Transfer-matrix formation kernel (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def _transfer_kernel(
+    blocks_ref,  # (TT, FB, B)   this tile's LLR blocks (f32)
+    w_ref,  # (B+S, S*R)   stacked Theta^T / one-hot P (f32)
+    m_out_ref,  # (1, FB, S, S)  tile transfer matrix, f32
+    *,
     n_states: int,
-    pack_survivors: bool,
-) -> int:
-    """VMEM footprint of the one-pass kernel's survivor ring, in bytes —
-    the term that bounds usable decision depths (DESIGN.md §8 table)."""
-    itemsize = jnp.dtype(ring_dtype(pack_survivors)).itemsize
-    return (
-        (depth_steps + time_tile)
-        * block_frames
-        * ring_words(n_states, pack_survivors)
-        * itemsize
+    n_slots: int,
+    llr_block: int,
+    carry_dtype,
+    matmul_dtype,
+    split_dot: bool,
+):
+    """Build one tile's tropical transfer matrices in VMEM.
+
+    The entry-state axis is folded into the matmul batch: row (f, i)
+    carries the metric-from-entry-i vector of frame f, so every
+    composition with the next stage matrix is the §2 fused step —
+    (FB*S, B+S) @ (B+S, S*R) on the MXU (S x S tiles are MXU-native for
+    K=7), then the segment max over slots on the VPU.  With
+    ``split_dot`` the branch-metric half runs in matmul_dtype and the
+    metric-routing half (the one-hot P) in f32, exactly like
+    ``viterbi.fused_potentials``, so the carry quantization matches the
+    XLA formation for every precision policy.  The (FB*S, S) matrix
+    carry never leaves VMEM; HBM sees one (FB, S, S) result per
+    (tile, frame-block) grid cell.
+    """
+    from repro.core.viterbi import AcsPrecision, fused_potentials
+
+    TT, FB, B = blocks_ref.shape
+    S, R = n_states, n_slots
+    rows = FB * S
+    row = jax.lax.broadcasted_iota(jnp.int32, (rows, S), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, S), 1)
+    m0 = jnp.where(
+        col == jax.lax.rem(row, S), jnp.float32(0.0), jnp.float32(-1.0e9)
     )
+    precision = AcsPrecision(
+        matmul_dtype=matmul_dtype, carry_dtype=carry_dtype,
+        split_dot=split_dot,
+    )
+    # operand casts hoisted out of the step loop; the routing half
+    # (one-hot P) stays f32 so split_dot keeps the carry exact
+    w_f32 = w_ref[...]
+    w_mm = w_f32.astype(matmul_dtype)
+
+    def step(t, m):
+        l_t = blocks_ref[t]  # (FB, B)
+        l2 = jnp.broadcast_to(l_t[:, None, :], (FB, S, B)).reshape(rows, B)
+        pot = fused_potentials(
+            l2, m, w_mm, w_mm[:llr_block], w_f32[llr_block:], precision
+        )
+        new = jnp.max(pot.reshape(rows, S, R), axis=-1)
+        # no per-row renorm (a per-entry offset would skew the tropical
+        # product); the per-frame normalization below bounds the scan
+        return new.astype(carry_dtype).astype(jnp.float32)
+
+    m = jax.lax.fori_loop(0, TT, step, m0).reshape(FB, S, S)
+    # per-frame normalization (a per-frame-tile constant, DESIGN.md §9)
+    peak = jnp.max(jnp.max(m, axis=-1, keepdims=True), axis=-2, keepdims=True)
+    m_out_ref[...] = (m - peak)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_states",
+        "n_slots",
+        "transfer_tile",
+        "block_frames",
+        "carry_dtype",
+        "matmul_dtype",
+        "split_dot",
+        "interpret",
+    ),
+)
+def transfer_matrix_pallas(
+    blocks: jnp.ndarray,  # (T', F, B), T' divisible by transfer_tile
+    w: jnp.ndarray,  # (B+S, S*R)
+    *,
+    n_states: int,
+    n_slots: int,
+    transfer_tile: int,
+    block_frames: int = 0,  # 0 = auto: keep FB*S rows MXU-sized
+    carry_dtype=jnp.float32,
+    matmul_dtype=jnp.float32,
+    split_dot: bool = False,
+    interpret=None,
+):
+    """Per-tile tropical transfer matrices M (N, F, S, S) f32, normalized
+    per (tile, frame) by their max entry (DESIGN.md §9).  Grid
+    (n_tiles, frame_blocks) — tiles are independent, so the whole
+    formation is one embarrassingly-parallel launch; the associative
+    scan over tiles stays in XLA where its log-depth schedule belongs.
+    The frame block auto-shrinks until the per-program footprint fits
+    the VMEM budget (``transfer_tile_vmem_bytes``); a tile too large
+    even at one frame per program is rejected up front rather than at
+    Mosaic launch.  ``interpret=None`` auto-detects: Mosaic on TPU,
+    emulation elsewhere.
+    """
+    from repro.core.kernel_geometry import (
+        FUSED_RING_VMEM_BUDGET, transfer_tile_vmem_bytes,
+    )
+
+    interpret = _resolve_interpret(interpret)
+    T, F, B = blocks.shape
+    S, R = n_states, n_slots
+    TT = min(transfer_tile, T)
+    if T % TT:
+        raise ValueError(f"T'={T} not divisible by transfer_tile={TT}")
+    n_tiles = T // TT
+    # operands (blocks, W, carry) are stored f32 in VMEM; casts to the
+    # matmul dtype are transient
+    FB = min(block_frames or max(1, 512 // S), F)
+    while FB > 1 and (
+        transfer_tile_vmem_bytes(TT, FB, S, B, R)
+        > FUSED_RING_VMEM_BUDGET
+    ):
+        FB //= 2
+    if (
+        transfer_tile_vmem_bytes(TT, FB, S, B, R)
+        > FUSED_RING_VMEM_BUDGET
+    ):
+        raise ValueError(
+            f"transfer_tile={TT} needs "
+            f"{transfer_tile_vmem_bytes(TT, FB, S, B, R)} bytes "
+            f"of VMEM even at {FB} frame(s)/program (budget "
+            f"{FUSED_RING_VMEM_BUDGET}); pick a smaller tile"
+        )
+    pad = (-F) % FB
+    if pad:
+        blocks = jnp.pad(blocks, ((0, 0), (0, pad), (0, 0)))
+    Fp = F + pad
+    grid = (n_tiles, Fp // FB)
+
+    kernel = functools.partial(
+        _transfer_kernel,
+        n_states=S,
+        n_slots=R,
+        llr_block=B,
+        carry_dtype=carry_dtype,
+        matmul_dtype=matmul_dtype,
+        split_dot=split_dot,
+    )
+    m = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TT, FB, B), lambda n, f: (n, f, 0)),
+            pl.BlockSpec(w.shape, lambda n, f: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, FB, S, S), lambda n, f: (n, f, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, Fp, S, S), jnp.float32),
+        interpret=interpret,
+    )(blocks.astype(jnp.float32), w.astype(jnp.float32))
+
+    return m[:, :F] if pad else m
