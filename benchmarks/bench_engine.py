@@ -1,0 +1,120 @@
+"""Offered-load sweep of the multi-tenant DecodeEngine (DESIGN.md §10).
+
+    PYTHONPATH=src python -m benchmarks.bench_engine
+    PYTHONPATH=src python -m benchmarks.run --only engine
+
+A synthetic mixed-tenant workload (a throughput-class ccsds-k7 tenant
+with ragged frame lengths, a latency-class punctured wifi-11a-r34
+tenant submitting serial kept-LLR streams, and a latency-class lte-tbcc
+tail-biting tenant) is replayed against a fresh engine at several
+offered-load multiples of the assembly capacity
+(``max_batch / max_wait[throughput]`` requests/s), driven on a virtual
+clock with a fixed poll tick.
+
+Row semantics (schema details in docs/BENCHMARKS.md):
+
+  * ``engine/latency@load=..,slo=..`` — p50/p99 request sojourn per SLO
+    class in VIRTUAL milliseconds: queueing + batch-assembly delay
+    under the max-wait policy.  Decode service time is intentionally
+    NOT part of the virtual clock (a CPU wall time would model the
+    wrong device); the wall-side throughput is reported separately.
+  * ``engine/occupancy@load=..`` — mean batch occupancy (real frames /
+    frame-rung slots), padding waste (1 - real LLR elements / padded
+    cell elements), batch count, measured CPU decode Mb/s for the whole
+    replay, and the path mix.  The ISSUE acceptance gate reads the
+    saturating-load row: occupancy >= 0.8.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+MAX_WAIT = {"latency": 0.00125, "throughput": 0.005}
+TICK = 0.0005  # virtual poll period, seconds
+
+
+def _workload(n_requests: int, base_len: int, seed: int = 0):
+    """Deterministic mixed-tenant request list: (request, n_msg_bits)."""
+    from repro.serve.engine import DecodeRequest
+
+    rng = np.random.default_rng(seed)
+    # deliberately OFF the power-of-two ladder so the padding-waste
+    # column measures real rounding (on-rung lengths would zero it)
+    lens = (base_len * 3 // 8, base_len * 3 // 4, base_len)
+    out = []
+    for i in range(n_requests):
+        kind = i % 3
+        if kind == 0:  # throughput tenant, ragged shaped frames
+            n = lens[i % len(lens)]
+            llrs = rng.normal(0, 1, (n, 2)).astype(np.float32)
+            out.append((DecodeRequest(llrs, "ccsds-k7", "throughput"), n))
+        elif kind == 1:  # latency tenant, serial punctured (r=3/4: Lp%4==0)
+            lp = (lens[i % len(lens)] // 4) * 4
+            llrs = rng.normal(0, 1, (lp,)).astype(np.float32)
+            out.append((DecodeRequest(llrs, "wifi-11a-r34", "latency"), lp))
+        else:  # latency tenant, tail-biting control blocks (exact cells)
+            llrs = rng.normal(0, 1, (128, 3)).astype(np.float32)
+            out.append((DecodeRequest(llrs, "lte-tbcc", "latency"), 128))
+    return out
+
+
+def _replay(requests, load: float, max_batch: int):
+    """Run one offered-load point on a fresh engine; returns
+    (engine, decoded_bits, wall_seconds)."""
+    from repro.serve.engine import DecodeEngine
+
+    engine = DecodeEngine(max_batch=max_batch, max_wait=dict(MAX_WAIT))
+    rate = load * max_batch / MAX_WAIT["throughput"]  # offered req/s
+    arrivals = [i / rate for i in range(len(requests))]
+    t0 = time.perf_counter()
+    now, i = 0.0, 0
+    while i < len(requests) or engine.queue_depth():
+        while i < len(requests) and arrivals[i] <= now:
+            engine.submit(requests[i][0], now=now)
+            i += 1
+        engine.poll(now=now)
+        now += TICK
+    engine.drain(now=now)
+    wall = time.perf_counter() - t0
+    bits = sum(n for _, n in requests)
+    return engine, bits, wall
+
+
+def bench(loads=(0.25, 1.0, 16.0), n_requests: int = 600,
+          base_len: int = 512, max_batch: int = 32):
+    """Returns (name, us_per_call, derived) rows for run.py.
+
+    ``loads`` are multiples of the aggregate assembly capacity
+    ``max_batch / max_wait[throughput]``; the workload spreads over ~9
+    distinct cells (3 tenants x 3 length rungs), so the per-CELL queue
+    only saturates (full frame rungs before the deadline fires — the
+    >= 0.8 occupancy acceptance regime) at the top multiple."""
+    requests = _workload(n_requests, base_len)
+    rows = []
+    for load in loads:
+        engine, bits, wall = _replay(requests, load, max_batch)
+        s = engine.stats()
+        for slo, v in sorted(s["latency"].items()):
+            rows.append((
+                f"engine/latency@load={load:g}x,slo={slo}",
+                v["p50"] * 1e6,
+                f"p50={v['p50']*1e3:.2f}ms;p99={v['p99']*1e3:.2f}ms"
+                f";n={v['n']};virtual",
+            ))
+        paths = "+".join(
+            f"{k}:{v}" for k, v in sorted(s["paths"].items())
+        )
+        rows.append((
+            f"engine/occupancy@load={load:g}x",
+            wall / max(s["batches"], 1) * 1e6,
+            f"occupancy={s['occupancy']:.3f};waste={s['padding_waste']:.3f}"
+            f";batches={s['batches']};jit={s['jit_cache']['misses']}"
+            f";{bits/wall/1e6:.2f}Mb/s-cpu;paths={paths}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

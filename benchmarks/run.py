@@ -18,7 +18,13 @@ the perf trajectory is tracked across PRs:
   * bench_latency    — §9 single-stream latency: sequential scan vs
                        time-parallel (wall, HLO depth, modeled device
                        latency) over F x T
+  * bench_engine     — §10 multi-tenant engine offered-load sweep:
+                       p50/p99 virtual sojourn per SLO class, batch
+                       occupancy + padding waste per load point
   * roofline_report  — §Roofline summary from the dry-run artifacts
+
+Artifact schemas (column meanings, units, regeneration commands) are
+documented in docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
@@ -35,6 +41,10 @@ _BYTES = re.compile(r"bytes=([0-9]+)")
 _MODELED = re.compile(r"modeled=([0-9.]+)us")
 _DEPTH = re.compile(r"depth=([0-9]+)(?:->([0-9]+))?")
 _SPEEDUP = re.compile(r"([0-9.]+)x-modeled")
+_OCCUPANCY = re.compile(r"occupancy=([0-9.]+)")
+_WASTE = re.compile(r"waste=([0-9.]+)")
+_P50 = re.compile(r"p50=([0-9.]+)ms")
+_P99 = re.compile(r"p99=([0-9.]+)ms")
 
 
 def _artifact_rows(rows):
@@ -67,6 +77,20 @@ def _artifact_rows(rows):
         m = _SPEEDUP.search(row["derived"])
         if m:
             row["speedup_modeled"] = float(m.group(1))
+        # §10 engine-suite columns: occupancy/waste per load point and
+        # per-SLO virtual p50/p99 sojourn in milliseconds
+        m = _OCCUPANCY.search(row["derived"])
+        if m:
+            row["occupancy"] = float(m.group(1))
+        m = _WASTE.search(row["derived"])
+        if m:
+            row["padding_waste"] = float(m.group(1))
+        m = _P50.search(row["derived"])
+        if m:
+            row["p50_ms"] = float(m.group(1))
+        m = _P99.search(row["derived"])
+        if m:
+            row["p99_ms"] = float(m.group(1))
         out.append(row)
     return out
 
@@ -109,6 +133,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_ber,
+        bench_engine,
         bench_kernel,
         bench_latency,
         bench_radix,
@@ -143,6 +168,11 @@ def main() -> None:
         "latency": lambda: bench_latency.bench(
             t_stages=(1 << 13, 1 << 15) if args.fast else (1 << 16, 1 << 19),
             n_frames=(1, 4) if args.fast else (1, 4, 16),
+        ),
+        "engine": lambda: bench_engine.bench(
+            n_requests=240 if args.fast else 600,
+            base_len=256 if args.fast else 512,
+            max_batch=16 if args.fast else 32,
         ),
         "roofline": roofline_report.bench,
     }

@@ -160,6 +160,15 @@ def _chunk_step_fused(
     return hist2, lam2, bits.T.astype(jnp.int32)
 
 
+def _window_valid(pos: int, t_steps: int, depth_steps: int) -> int:
+    """Number of the chunk window's T oldest steps that are genuinely
+    emittable at stream position ``pos`` — the single emission rule
+    shared by ``decode_chunk`` and the multi-session fused dispatch
+    (``decode_chunk_multi``, DESIGN.md §10): the window covers steps
+    [pos-D, pos+T-D); steps before the stream start are warmup filler."""
+    return max(0, pos + t_steps - depth_steps) - max(0, pos - depth_steps)
+
+
 @functools.partial(jax.jit, static_argnames=("tables", "final_state"))
 def _flush_step(
     hist: jnp.ndarray,
@@ -589,11 +598,24 @@ class ViterbiDecoder:
         if F != state.n_frames:
             raise ValueError(f"state has {state.n_frames} frames, got {F}")
         blocks = blocks_from_llrs(jnp.asarray(llrs), self.rho)
-        tt = self._one_pass_tile(blocks.shape[0], state.depth_steps)
+        hist, lam, bits = self._dispatch_chunk(state.hist, state.lam, blocks)
+        T = c // self.rho
+        n_valid = _window_valid(state.pos, T, state.depth_steps)
+        out = bits[:, (T - n_valid) * self.rho:] if n_valid else bits[:, :0]
+        return StreamState(lam=lam, hist=hist, pos=state.pos + T), out
+
+    def _dispatch_chunk(self, hist, lam, blocks):
+        """One chunk window of ACS + delayed traceback on raw carries:
+        (hist, lam, blocks) -> (hist', lam', window bits (F, T*rho)) for
+        the T OLDEST window steps.  Picks the one-pass kernel or the
+        two-pass XLA step by the shared §8 eligibility rule — the single
+        dispatch point under ``decode_chunk`` and the engine's fused
+        multi-session step (``decode_chunk_multi``, DESIGN.md §10)."""
+        tt = self._one_pass_tile(blocks.shape[0], hist.shape[0])
         if tt:
-            hist, lam, bits = _chunk_step_fused(
-                state.hist,
-                state.lam,
+            return _chunk_step_fused(
+                hist,
+                lam,
                 blocks,
                 self.tables,
                 self.precision,
@@ -601,22 +623,73 @@ class ViterbiDecoder:
                 self.block_frames or DEFAULT_BLOCK_FRAMES,
                 self.ring_packed,
             )
-        else:
-            hist, lam, bits = _chunk_step(
-                state.hist,
-                state.lam,
-                blocks,
-                self.tables,
-                self.precision,
-                self.use_kernel,
-                self.ring_packed,
+        return _chunk_step(
+            hist,
+            lam,
+            blocks,
+            self.tables,
+            self.precision,
+            self.use_kernel,
+            self.ring_packed,
+        )
+
+    def decode_chunk_multi(self, states, chunks):
+        """Advance several INDEPENDENT streaming states in one fused
+        dispatch (DESIGN.md §10) — the multi-tenant session step.
+
+        ``states`` are StreamStates of this decoder (same decision
+        depth); ``chunks`` the matching (f_i, c, beta) LLR chunks, all
+        with the same step count c.  The states are stacked along the
+        frame axis, run through ONE ``_dispatch_chunk`` (one jit entry
+        per (depth, total F, c) shape — the engine pads total F to a
+        cell rung), and split back.  Sessions may sit at *different*
+        stream positions: the delayed-decision window is sliced per
+        state with the same emission rule as ``decode_chunk``, so each
+        session's emitted bits are identical to driving it alone.
+
+        Returns (new_states, outs), outs[i] of shape (f_i, m_i*rho).
+        """
+        if not states:
+            return [], []
+        if len(states) != len(chunks):
+            raise ValueError(
+                f"{len(states)} states but {len(chunks)} chunks"
             )
-        T = c // self.rho
-        D = state.depth_steps
-        # emitted window covers steps [pos-D, pos+T-D); drop negatives
-        n_valid = max(0, state.pos + T - D) - max(0, state.pos - D)
-        out = bits[:, (T - n_valid) * self.rho:] if n_valid else bits[:, :0]
-        return StreamState(lam=lam, hist=hist, pos=state.pos + T), out
+        depths = {s.depth_steps for s in states}
+        if len(depths) != 1:
+            raise ValueError(f"mixed decision depths {sorted(depths)}")
+        chunks = [jnp.asarray(ch) for ch in chunks]
+        steps = {ch.shape[1] for ch in chunks}
+        if len(steps) != 1:
+            raise ValueError(f"mixed chunk lengths {sorted(steps)}")
+        for s, ch in zip(states, chunks):
+            if ch.shape[0] != s.n_frames:
+                raise ValueError(
+                    f"state has {s.n_frames} frames, chunk {ch.shape[0]}"
+                )
+        blocks = blocks_from_llrs(jnp.concatenate(chunks, axis=0), self.rho)
+        hist = jnp.concatenate([s.hist for s in states], axis=1)
+        lam = jnp.concatenate([s.lam for s in states], axis=0)
+        hist2, lam2, bits = self._dispatch_chunk(hist, lam, blocks)
+        T = steps.pop() // self.rho
+        D = depths.pop()
+        new_states, outs, off = [], [], 0
+        for s in states:
+            f = s.n_frames
+            b = bits[off : off + f]
+            n_valid = _window_valid(s.pos, T, D)
+            outs.append(
+                b[:, (T - n_valid) * self.rho:] if n_valid else b[:, :0]
+            )
+            new_states.append(
+                StreamState(
+                    lam=lam2[off : off + f],
+                    hist=hist2[:, off : off + f],
+                    pos=s.pos + T,
+                )
+            )
+            off += f
+        return new_states, outs
 
     def flush_stream(
         self, state: StreamState, final_state: Optional[int] = None

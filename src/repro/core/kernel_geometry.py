@@ -31,6 +31,9 @@ __all__ = [
     "pick_transfer_tile",
     "time_parallel_plan",
     "transfer_tile_vmem_bytes",
+    "ENGINE_MIN_CELL",
+    "pick_cell_length",
+    "pick_cell_frames",
 ]
 
 DEFAULT_BLOCK_FRAMES = 256
@@ -183,6 +186,40 @@ def transfer_tile_vmem_bytes(
         + (llr_block + n_states) * n_states * n_slots * matmul_itemsize  # W
         + rows * n_states * n_slots * 4  # potentials (f32 accumulate)
     )
+
+
+# serving-engine cell geometry (DESIGN.md §10): ragged request lengths
+# are bucketed onto a power-of-two ladder starting here, so the number
+# of distinct jitted (F, T) decode programs stays logarithmic in the
+# length spread while per-request padding waste stays < 2x worst case
+ENGINE_MIN_CELL = 64
+
+
+def pick_cell_length(n: int, min_cell: int = ENGINE_MIN_CELL,
+                     multiple: int = 1) -> int:
+    """Serving-cell length rung for an n-element request (DESIGN.md §10):
+    the smallest power-of-two ladder rung >= n (>= ``min_cell``), rounded
+    up to ``multiple`` — punctured codes pass their kept-bits-per-period
+    so every cell depunctures to whole pattern periods.  The rung is the
+    T half of the engine's (F, T) cell key, so two engines fed the same
+    requests always agree on the cells (bucketing determinism)."""
+    if n <= 0:
+        raise ValueError(f"request length must be positive, got {n}")
+    cell = min_cell
+    while cell < n:
+        cell *= 2
+    return cell + (-cell) % multiple
+
+
+def pick_cell_frames(n: int, max_batch: int) -> int:
+    """Frame-count rung of an engine cell (DESIGN.md §10): the smallest
+    power of two >= ``n``, capped at ``max_batch`` — the F half of the
+    cell key, bounding jit-cache entries to log2(max_batch) per length
+    rung while keeping batch occupancy >= 50% by construction."""
+    f = 1
+    while f < min(n, max_batch):
+        f *= 2
+    return min(f, max_batch)
 
 
 def one_pass_time_tile(

@@ -55,6 +55,7 @@ from repro.core.viterbi import (
 
 __all__ = [
     "frame_mesh",
+    "engine_dispatch_ready",
     "sharded_decode_frames",
     "sharded_decode_streams",
     "sharded_decode_time_parallel",
@@ -67,6 +68,21 @@ def frame_mesh(n_devices: Optional[int] = None, axis: str = "frames") -> Mesh:
     if n_devices is not None:
         devs = devs[:n_devices]
     return Mesh(np.asarray(devs), (axis,))
+
+
+def engine_dispatch_ready(
+    n_frames: int, mesh: Optional[Mesh] = None, axis: str = "frames"
+) -> bool:
+    """Whether a serving-engine cell batch should dispatch onto the
+    sharded frame decoder (DESIGN.md §10): True when the cell's frame
+    count fills every device of ``mesh`` without remainder.  Engine
+    cells are already padded to frame rungs, so letting
+    ``sharded_decode_frames`` zero-LLR-pad a ragged remainder on top
+    would double-count padding waste — underfilled cells stay on the
+    single-device path instead."""
+    mesh = mesh or frame_mesh(axis=axis)
+    n_dev = mesh.shape[axis]
+    return n_frames >= n_dev and n_frames % n_dev == 0
 
 
 def _pad_to(llrs: jnp.ndarray, multiple: int) -> jnp.ndarray:

@@ -1,20 +1,33 @@
 """Serving launcher.
 
-Two services:
+Three services:
   * ``--service viterbi`` — the paper's workload: batched tensor-ACS
     decode of LLR streams through the unified ViterbiDecoder front door
     (DESIGN.md §6; optimized §Perf C4b config via --optimized).
     ``--code`` picks any registry standard (DESIGN.md §7): punctured
     rates (wifi-11a-r34, dvb-s-r78, ...) serve the serial kept-LLR
     stream; tail-biting codes (lte-tbcc) decode whole frames via WAVA.
-    ``--mode`` selects the decode scenario:
+    ``--mode`` selects the decode scenario (decision table: README
+    "Serving"):
       - tiled   (default) stateless overlapping-window decode (§III);
       - chunked stateful streaming — path metrics + survivor ring carried
         across --chunk-len chunks, zero redundant ACS work;
       - sharded streams sharded over every visible device via shard_map
         (run under XLA_FLAGS=--xla_force_host_platform_device_count=N to
         demo on CPU);
-      - batch   one truncated-Viterbi frame per stream.
+      - batch   one truncated-Viterbi frame per stream;
+      - time_parallel — §9 associative-scan decode of whole streams
+        (the single-stream latency path; identical bits, log-depth
+        dependency chain instead of T-linear).
+    ``--use-kernel`` runs the Pallas backend: streaming modes (tiled /
+    chunked / sharded) then take the one-pass time-tiled ACS+traceback
+    kernel (DESIGN.md §8) — survivors stay in a VMEM ring, no phi
+    round-trip through HBM.
+  * ``--service engine`` — the multi-tenant serving engine
+    (DESIGN.md §10): ragged mixed-code requests bucketed into padded
+    (F, T) cells, assembled under --max-wait-ms/--streams, routed per
+    SLO class (--slo latency|throughput|mixed), with queue-depth /
+    backpressure stats and a graceful drain at the end.
   * ``--service lm --arch <id>`` — LM prefill + decode loop on the
     reduced config (CPU demo of the production serve path).
 """
@@ -32,11 +45,16 @@ def _viterbi_run_fn(vcfg, args):
     """Build run(llrs) -> bits for the selected --mode."""
     from repro.serve.step import make_viterbi_decoder, make_viterbi_serve_step
 
+    use_kernel = getattr(args, "use_kernel", False)
     if args.mode in ("tiled", "batch"):
-        return jax.jit(make_viterbi_serve_step(vcfg, mode=args.mode))
+        return jax.jit(
+            make_viterbi_serve_step(
+                vcfg, use_kernel=use_kernel, mode=args.mode
+            )
+        )
     if args.mode == "chunked":
         decoder = make_viterbi_decoder(
-            vcfg, decision_depth=args.decision_depth
+            vcfg, use_kernel=use_kernel, decision_depth=args.decision_depth
         )
 
         def run(llrs):
@@ -45,10 +63,22 @@ def _viterbi_run_fn(vcfg, args):
             )
 
         return run
+    if args.mode == "time_parallel":
+        # §9 associative-scan decode of each whole stream: identical
+        # bits, sequential depth 3*tile + log2(tiles) instead of T
+        decoder = make_viterbi_decoder(vcfg, use_kernel=use_kernel)
+
+        def run(llrs):
+            return decoder.decode_batch(
+                llrs, initial_state=None, final_state=None,
+                time_parallel=True,
+            )
+
+        return run
     if args.mode == "sharded":
         from repro.distributed.decoder import sharded_decode_streams
 
-        decoder = make_viterbi_decoder(vcfg)
+        decoder = make_viterbi_decoder(vcfg, use_kernel=use_kernel)
 
         def run(llrs):
             # punctured streams: erasures re-inserted host-side, then the
@@ -60,6 +90,8 @@ def _viterbi_run_fn(vcfg, args):
                 cfg=decoder.default_tiled_config(vcfg.tiled),
                 precision=vcfg.precision,
                 pack_survivors=vcfg.pack_survivors,
+                use_kernel=use_kernel,
+                one_pass=use_kernel,
             )
 
         return run
@@ -120,6 +152,83 @@ def serve_viterbi(args):
     )
 
 
+def serve_engine(args):
+    """Multi-tenant engine demo (DESIGN.md §10): a synthetic ragged
+    mixed-code/mixed-SLO workload submitted against a virtual clock,
+    polled tick by tick, then gracefully drained — prints decode
+    throughput, BER, queue depth / backpressure and the engine's
+    occupancy / padding-waste / jit-cache counters."""
+    from repro.codes import encode_standard, get_code, standard_llrs
+    from repro.serve.step import make_decode_engine
+
+    if args.slo == "mixed":
+        tenants = [
+            ("ccsds-k7", "throughput"),
+            (args.code if args.code != "ccsds-k7" else "wifi-11a-r34",
+             "latency"),
+            ("lte-tbcc", "latency"),
+        ]
+    else:
+        tenants = [(args.code, args.slo)]
+    engine = make_decode_engine(
+        use_kernel=args.use_kernel,
+        max_batch=args.streams,
+        max_wait={"latency": args.max_wait_ms / 4e3,
+                  "throughput": args.max_wait_ms / 1e3},
+    )
+    rng = np.random.default_rng(0)
+    lens = [args.stream_len // 4, args.stream_len // 3, args.stream_len // 2]
+    reqs = []  # (arrival, request, true bits)
+    for b in range(args.batches * args.streams):
+        code_name, slo = tenants[b % len(tenants)]
+        code = get_code(code_name)
+        n = 128 if code.termination == "tailbiting" else lens[b % len(lens)]
+        bits = jnp.asarray(rng.integers(0, 2, (1, n)), jnp.int32)
+        llrs = standard_llrs(
+            jax.random.PRNGKey(b), encode_standard(bits, code),
+            args.ebn0, code,
+        )
+        from repro.serve.engine import DecodeRequest
+
+        reqs.append((
+            b * 1e-4,  # 10k offered req/s of virtual load
+            DecodeRequest(llrs=np.asarray(llrs)[0], code=code_name, slo=slo),
+            np.asarray(bits)[0],
+        ))
+    t0 = time.perf_counter()
+    tickets, peak_q = [], 0
+    tick = args.max_wait_ms / 4e3
+    now, i = 0.0, 0
+    while i < len(reqs) or engine.queue_depth():
+        while i < len(reqs) and reqs[i][0] <= now:
+            tickets.append(engine.submit(reqs[i][1], now=now))
+            i += 1
+        engine.poll(now=now)
+        peak_q = max(peak_q, engine.queue_depth())
+        now += tick
+    engine.drain(now=now)  # graceful drain: flush partial cells
+    dt = time.perf_counter() - t0
+    total = err = dropped = 0
+    for (_, _, bits), t in zip(reqs, tickets):
+        if t.dropped:  # backpressure sheds, it doesn't corrupt BER
+            dropped += 1
+            continue
+        total += bits.size
+        err += int((t.bits != bits).sum())
+    s = engine.stats()
+    lat = {k: f"p50={v['p50']*1e3:.2f}ms/p99={v['p99']*1e3:.2f}ms"
+           for k, v in s["latency"].items()}
+    print(
+        f"[engine] {total} bits in {dt:.2f}s = {total/dt/1e6:.2f} Mb/s, "
+        f"BER={err/max(total,1):.3e}\n"
+        f"[engine] batches={s['batches']} occupancy={s['occupancy']:.2f} "
+        f"padding_waste={s['padding_waste']:.2f} paths={s['paths']}\n"
+        f"[engine] peak_queue={peak_q} rejected={s['rejected']} "
+        f"dropped={dropped} jit_cache={s['jit_cache']} "
+        f"latency(virtual)={lat}"
+    )
+
+
 def serve_lm(args):
     from repro.configs import get_smoke_config
     from repro.models import lm
@@ -154,7 +263,7 @@ def serve_lm(args):
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--service", default="viterbi",
-                    choices=["viterbi", "lm"])
+                    choices=["viterbi", "engine", "lm"])
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--streams", type=int, default=8)
     ap.add_argument("--stream-len", type=int, default=8192)
@@ -168,13 +277,35 @@ def main():
         "forces --mode batch)",
     )
     ap.add_argument("--optimized", action="store_true")
-    ap.add_argument("--mode", default="tiled",
-                    choices=["tiled", "chunked", "sharded", "batch"])
+    ap.add_argument(
+        "--mode", default="tiled",
+        choices=["tiled", "chunked", "sharded", "batch", "time_parallel"],
+        help="decode scenario (README 'Serving' decision table); "
+        "time_parallel is the §9 log-depth single-stream latency path",
+    )
+    ap.add_argument(
+        "--use-kernel", action="store_true",
+        help="Pallas backend; streaming modes then run the one-pass "
+        "time-tiled ACS+traceback kernel (DESIGN.md §8)",
+    )
     ap.add_argument("--chunk-len", type=int, default=4096)
     ap.add_argument("--decision-depth", type=int, default=None)
+    ap.add_argument(
+        "--slo", default="mixed",
+        choices=["mixed", "latency", "throughput"],
+        help="engine service: SLO class of the synthetic tenants "
+        "(mixed = one latency + one throughput + one tail-biting tenant)",
+    )
+    ap.add_argument(
+        "--max-wait-ms", type=float, default=10.0,
+        help="engine service: throughput-class batch-assembly deadline "
+        "(latency class waits a quarter of this)",
+    )
     args = ap.parse_args()
     if args.service == "viterbi":
         serve_viterbi(args)
+    elif args.service == "engine":
+        serve_engine(args)
     else:
         serve_lm(args)
 

@@ -1,0 +1,4 @@
+"""Serving layer: jittable step factories for the single-tenant demo
+loop (DESIGN.md §6) and the multi-tenant ``DecodeEngine`` with dynamic
+batch assembly (DESIGN.md §10)."""
+from .engine import DecodeEngine, DecodeRequest, Ticket  # noqa: F401

@@ -1,0 +1,729 @@
+"""Multi-tenant serving engine: dynamic batch assembly over the
+ViterbiDecoder front door (DESIGN.md §10).
+
+Everything below the engine (fused one-pass kernel §8, time-parallel
+scan §9, sharded streams §6, WAVA §7) decodes dense fixed-shape (F, T)
+batches at peak rate; real traffic is the opposite — many concurrent
+RAGGED requests, mixed codes, mixed latency/throughput SLOs.  The
+``DecodeEngine`` is the layer that turns one into the other:
+
+  * **cell bucketing** — each request is assigned a cell keyed by
+    (code, SLO class, length rung): ragged lengths round up a
+    power-of-two ladder (``kernel_geometry.pick_cell_length``), frame
+    counts round up to a frame rung (``pick_cell_frames``), so the set
+    of jitted decode programs stays logarithmic in the length spread.
+    Padding is TRAILING ZERO LLRs — information-free stages (the §7
+    erasure argument): the argmax-front traceback reaches a true-end
+    state attaining the global-max metric, so the decoded prefix is
+    bit-identical to decoding the unpadded frame.  Tail-biting cells
+    are exact-length (the circular trellis cannot be padded; §7).
+  * **batch assembly** — per-cell FIFO queues flush when ``max_batch``
+    requests accumulate or the oldest request has waited
+    ``max_wait[slo]`` (virtual-clock friendly: every entry point takes
+    an explicit ``now``), with queue-depth backpressure past
+    ``max_pending``.
+  * **SLO -> path routing** (the §10 routing table): tail-biting codes
+    -> WAVA; latency-class cells that underfill the device
+    (``backend.device_underfill_rows``) -> §9 time-parallel decode;
+    throughput-class long cells on a kernel-enabled engine -> the §8
+    one-pass streaming path; cells that fill a provided device mesh ->
+    §6 sharded frames; everything else -> dense two-pass batch decode.
+    Every path is bit-identical to direct ``ViterbiDecoder`` decode
+    with uniform initial metrics and an argmax traceback
+    (``decode_batch(llrs, initial_state=None, final_state=None)``) —
+    asserted per registry code in ``tests/test_engine.py``.
+  * **jit-fn cache** — decode callables are cached per
+    (code, path, F rung, length rung); repeated same-cell batches hit
+    the cache (and therefore jax's trace cache) instead of recompiling;
+    ``stats()["jit_cache"]`` counts hits/misses/entries.
+  * **sessions** — chunked-streaming tenants keep their survivor ring +
+    metric carry (``StreamState``) in an LRU table; concurrent session
+    chunks of one code fuse into ONE ``decode_chunk_multi`` dispatch
+    even when sessions sit at different stream positions.  Table
+    overflow evicts the least-recently-used session: its pending chunks
+    are decoded, the ring is flushed, and the tail is retrievable via
+    ``evicted_tail`` — so an evicted session's total output equals
+    uninterrupted ``decode_stream_chunked`` on what it consumed.
+
+``launch/serve.py --service engine`` drives a synthetic multi-tenant
+mix through this engine; ``benchmarks/bench_engine.py`` sweeps offered
+load into ``BENCH_engine.json`` (p50/p99 per SLO class, batch occupancy,
+padding waste — schema in docs/BENCHMARKS.md).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decoder import ViterbiDecoder
+from repro.core.kernel_geometry import (
+    ENGINE_MIN_CELL,
+    pick_cell_frames,
+    pick_cell_length,
+    time_parallel_plan,
+)
+
+__all__ = [
+    "SLO_CLASSES",
+    "DEFAULT_MAX_WAIT",
+    "DecodeRequest",
+    "Ticket",
+    "DecodeEngine",
+]
+
+SLO_CLASSES = ("latency", "throughput")
+
+# max batch-assembly wait per SLO class, seconds (DESIGN.md §10):
+# latency-class cells flush an order of magnitude sooner than
+# throughput-class cells trade wait for fill
+DEFAULT_MAX_WAIT = {"latency": 0.001, "throughput": 0.010}
+
+# throughput-class cells at or above this many radix steps route to the
+# §8 one-pass streaming path when the engine's decoder is
+# kernel-enabled; shorter frames stay on the dense two-pass batch
+STREAM_MIN_STEPS = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeRequest:
+    """One tenant request: ragged LLRs + registry code + SLO class.
+
+    ``llrs`` is (n, beta) shaped stages for unpunctured / tail-biting
+    codes, or the 1-D serial kept-LLR stream (Lp,) for punctured codes
+    (the §7 front-door convention, per frame).
+    """
+
+    llrs: np.ndarray
+    code: str = "ccsds-k7"
+    slo: str = "throughput"
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Engine-side handle for a submitted request (or session chunk).
+
+    ``bits`` is filled (np.int32, message bits) when the batch the
+    request rode in decodes; ``dropped`` marks backpressure rejects.
+    """
+
+    id: int
+    code: str
+    slo: str
+    submitted: float
+    n_out: int
+    done: bool = False
+    dropped: bool = False
+    bits: Optional[np.ndarray] = None
+    completed: Optional[float] = None
+    cell: Optional[Tuple] = None
+    path: Optional[str] = None
+
+    @property
+    def sojourn(self) -> Optional[float]:
+        return None if self.completed is None else (
+            self.completed - self.submitted
+        )
+
+
+@dataclasses.dataclass
+class _Session:
+    """LRU-table entry of one chunked-streaming tenant (DESIGN.md §10)."""
+
+    sid: str
+    code: str
+    state: object  # core.decoder.StreamState
+    pending: collections.deque  # of (Ticket, shaped (1, c, beta) chunk)
+    last_used: float
+    consumed_steps: int = 0
+
+
+class DecodeEngine:
+    """Multi-tenant decode engine with dynamic batch assembly
+    (DESIGN.md §10).  See the module docstring for the design; the
+    operator-facing walkthrough lives in README "Serving".
+
+    Parameters
+    ----------
+    max_batch        : frame cap per assembled batch (and frame-rung cap).
+    max_wait         : per-SLO assembly deadline, seconds (virtual or
+                       wall — whatever clock ``now`` arguments carry).
+    max_pending      : queue-depth backpressure bound; past it ``submit``
+                       marks tickets ``dropped`` instead of queueing.
+    use_kernel       : thread the Pallas backend into every decoder
+                       (enables the §8 one-pass route for throughput
+                       traffic).
+    precision        : AcsPrecision shared by all per-code decoders.
+    decision_depth   : streaming decision depth for sessions (stretched
+                       per code by the §7 puncture expansion).
+    session_capacity : LRU session-table bound; overflow evicts+flushes.
+    mesh             : optional device mesh — cells whose frame rung
+                       fills it dispatch onto §6 ``sharded_decode_frames``
+                       (``distributed.decoder.engine_dispatch_ready``).
+    underfill_rows   : override of ``backend.device_underfill_rows()``
+                       for the §9 latency-route eligibility (tests /
+                       capacity planning; None = probe the backend).
+    min_cell         : bottom rung of the length ladder.
+    """
+
+    def __init__(
+        self,
+        max_batch: int = 64,
+        max_wait: Optional[Dict[str, float]] = None,
+        max_pending: int = 4096,
+        use_kernel: bool = False,
+        precision=None,
+        decision_depth: Optional[int] = None,
+        session_capacity: int = 128,
+        mesh=None,
+        underfill_rows: Optional[int] = None,
+        min_cell: int = ENGINE_MIN_CELL,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self.max_wait = dict(DEFAULT_MAX_WAIT, **(max_wait or {}))
+        self.max_pending = max_pending
+        self.use_kernel = use_kernel
+        self.precision = precision
+        self.decision_depth = decision_depth
+        self.session_capacity = session_capacity
+        self.mesh = mesh
+        self.underfill_rows = underfill_rows
+        self.min_cell = min_cell
+        self._decoders: Dict[str, ViterbiDecoder] = {}
+        self._queues: Dict[Tuple, collections.deque] = {}
+        self._fns: Dict[Tuple, object] = {}
+        self._fn_hits = 0
+        self._fn_misses = 0
+        self._sessions: "collections.OrderedDict[str, _Session]" = (
+            collections.OrderedDict()
+        )
+        self._evicted: "collections.OrderedDict[str, np.ndarray]" = (
+            collections.OrderedDict()
+        )
+        self._ids = itertools.count()
+        self._sids = itertools.count()
+        # histories are bounded (DESIGN.md §10): a long-running engine
+        # must not grow state per request — percentiles cover the most
+        # recent window, batch_log the most recent batches, and parked
+        # eviction tails expire oldest-first if never read
+        self._sojourns: Dict[str, collections.deque] = {
+            s: collections.deque(maxlen=4096) for s in SLO_CLASSES
+        }
+        self.batch_log: "collections.deque[dict]" = collections.deque(
+            maxlen=1024
+        )
+        self._done_buffer: List[Ticket] = []  # completed out of band
+        self._counts = collections.Counter()
+        self._elems = collections.Counter()  # real/padded LLR elements
+
+    # -- decoders / jit-fn cache ------------------------------------------
+
+    def _decoder(self, code: str) -> ViterbiDecoder:
+        """One ViterbiDecoder per registry code, built lazily and shared
+        by every cell of that code — tables are hashed by identity
+        (§6), so sharing the instance is what makes repeated same-cell
+        batches hit the jax trace cache."""
+        if code not in self._decoders:
+            kw = {}
+            if self.decision_depth is not None:
+                kw["decision_depth"] = self.decision_depth
+            self._decoders[code] = ViterbiDecoder.from_standard(
+                code,
+                precision=self.precision,
+                use_kernel=self.use_kernel,
+                **kw,
+            )
+        return self._decoders[code]
+
+    def _underfill(self) -> int:
+        if self.underfill_rows is not None:
+            return self.underfill_rows
+        from repro.core.backend import device_underfill_rows
+
+        return device_underfill_rows()
+
+    def _pick_path(
+        self, code: str, slo: str, f_cell: int, n_stages: int
+    ) -> str:
+        """The §10 SLO -> decode-path routing table, in code order."""
+        dec = self._decoder(code)
+        steps = -(-n_stages // dec.rho)
+        if dec.termination == "tailbiting":
+            return "wava"
+        if slo == "latency":
+            tile = time_parallel_plan(
+                f_cell,
+                steps,
+                dec.spec.n_states,
+                None,
+                dec.transfer_tile,
+                underfill_rows=self._underfill(),
+            )
+            if tile is not None:
+                return "time_parallel"
+        if slo == "throughput" and dec.one_pass and steps >= STREAM_MIN_STEPS:
+            return "stream"
+        if self.mesh is not None:
+            from repro.distributed.decoder import engine_dispatch_ready
+
+            if engine_dispatch_ready(f_cell, self.mesh):
+                return "sharded"
+        return "batch"
+
+    def _decode_fn(self, code: str, path: str, f_cell: int, l_cell: int):
+        """Cached decode callable per (code, path, F rung, length rung)
+        — the jit-cache key of DESIGN.md §10.  One engine-level entry
+        maps onto one traced program shape, so the hit/miss counters
+        are the recompile accounting the tests assert on."""
+        key = (code, path, f_cell, l_cell)
+        if key in self._fns:
+            self._fn_hits += 1
+            return self._fns[key]
+        self._fn_misses += 1
+        dec = self._decoder(code)
+        if path == "wava":
+            fn = lambda llrs: dec.decode_tailbiting(llrs)[0]  # noqa: E731
+        elif path == "time_parallel":
+            fn = lambda llrs: dec.decode_batch(  # noqa: E731
+                llrs, initial_state=None, final_state=None,
+                time_parallel=True,
+            )
+        elif path == "stream":
+            fn = lambda llrs: dec.decode_stream_chunked(  # noqa: E731
+                llrs, initial_state=None
+            )
+        elif path == "sharded":
+            fn = lambda llrs: dec.decode_sharded(  # noqa: E731
+                llrs, mesh=self.mesh, initial_state=None
+            )
+        else:
+            fn = lambda llrs: dec.decode_batch(  # noqa: E731
+                llrs, initial_state=None, final_state=None,
+                time_parallel=False,
+            )
+        self._fns[key] = fn
+        return fn
+
+    # -- request intake ----------------------------------------------------
+
+    def _validate(self, req: DecodeRequest):
+        """-> (llrs np.f32, n_stages, serial, l_input) or raises."""
+        from repro.codes.registry import get_code
+
+        code = get_code(req.code)
+        if req.slo not in SLO_CLASSES:
+            raise ValueError(
+                f"unknown SLO class {req.slo!r}; known: {SLO_CLASSES}"
+            )
+        llrs = np.asarray(req.llrs, np.float32)
+        if code.puncture is not None:
+            if llrs.ndim != 1:
+                raise ValueError(
+                    f"{req.code} is punctured: requests carry the serial "
+                    f"kept-LLR stream (Lp,), got shape {llrs.shape}"
+                )
+            n_stages = code.puncture.stages_for(llrs.shape[0])
+            return llrs, n_stages, True, llrs.shape[0]
+        if llrs.ndim != 2 or llrs.shape[1] != code.spec.beta:
+            raise ValueError(
+                f"{req.code} requests carry (n, beta={code.spec.beta}) "
+                f"shaped LLRs, got shape {llrs.shape}"
+            )
+        return llrs, llrs.shape[0], False, llrs.shape[0]
+
+    def _cell_length(self, req_code, serial: bool, tailbiting: bool,
+                     l_input: int) -> int:
+        """Length rung of the cell (DESIGN.md §10 bucketing rules):
+        tail-biting frames keep their exact length (circular trellis —
+        a pad stage would join the wrap-around path); punctured serial
+        lengths round to whole pattern periods so the padded stream
+        depunctures cleanly; everything else rides the ladder as-is."""
+        if tailbiting:
+            return l_input
+        mult = req_code.puncture.n_kept if serial else 1
+        return pick_cell_length(l_input, self.min_cell, mult)
+
+    def submit(self, req: DecodeRequest, now: Optional[float] = None
+               ) -> Ticket:
+        """Enqueue one request; returns its Ticket (``dropped=True``
+        under backpressure).  ``now`` is the submission timestamp —
+        pass a virtual clock for deterministic tests/benches."""
+        from repro.codes.registry import get_code
+
+        now = time.monotonic() if now is None else now
+        llrs, n_stages, serial, l_input = self._validate(req)
+        code = get_code(req.code)
+        tb = code.termination == "tailbiting"
+        l_cell = self._cell_length(code, serial, tb, l_input)
+        ticket = Ticket(
+            id=next(self._ids),
+            code=req.code,
+            slo=req.slo,
+            submitted=now,
+            n_out=n_stages,
+        )
+        if self.queue_depth() >= self.max_pending:
+            ticket.dropped = True
+            self._counts["rejected"] += 1
+            return ticket
+        key = (req.code, req.slo, l_cell, "tb" if tb else "open")
+        self._queues.setdefault(key, collections.deque()).append(
+            (ticket, llrs)
+        )
+        self._counts["submitted"] += 1
+        return ticket
+
+    def queue_depth(self) -> int:
+        """Requests + session chunks currently waiting (the
+        backpressure signal)."""
+        return sum(len(q) for q in self._queues.values()) + sum(
+            len(s.pending) for s in self._sessions.values()
+        )
+
+    # -- batch assembly + decode ------------------------------------------
+
+    def poll(self, now: Optional[float] = None) -> List[Ticket]:
+        """Assemble and decode every batch that is due at ``now`` (full
+        cells, or cells whose oldest request exceeded the SLO's
+        max-wait), plus all pending session chunks.  Returns the
+        tickets completed by this call, in completion order (plus any
+        completed out of band by close_session/eviction since the last
+        poll)."""
+        now = time.monotonic() if now is None else now
+        done, self._done_buffer = self._done_buffer, []
+        for key in sorted(self._queues):
+            q = self._queues[key]
+            while q and (
+                len(q) >= self.max_batch
+                or now - q[0][0].submitted >= self.max_wait[key[1]]
+            ):
+                done.extend(self._run_batch(key, q, now))
+        done.extend(self._run_sessions(now))
+        return done
+
+    def drain(self, now: Optional[float] = None) -> List[Ticket]:
+        """Graceful drain: decode everything still queued — partial
+        cells included — and all pending session chunks.  Sessions stay
+        open (close them via ``close_session``)."""
+        now = time.monotonic() if now is None else now
+        done, self._done_buffer = self._done_buffer, []
+        for key in sorted(self._queues):
+            q = self._queues[key]
+            while q:
+                done.extend(self._run_batch(key, q, now))
+        done.extend(self._run_sessions(now))
+        return done
+
+    def _run_batch(self, key, q, now: float) -> List[Ticket]:
+        code_name, slo, l_cell, kind = key
+        k = min(len(q), self.max_batch)
+        entries = [q.popleft() for _ in range(k)]
+        f_cell = pick_cell_frames(k, self.max_batch)
+        dec = self._decoder(code_name)
+        serial = dec.puncture is not None
+        shape = (f_cell, l_cell) if serial else (
+            f_cell, l_cell, dec.spec.beta
+        )
+        dense = np.zeros(shape, np.float32)
+        real_elems = 0
+        for i, (_, llrs) in enumerate(entries):
+            dense[i, : llrs.shape[0]] = llrs
+            real_elems += llrs.size
+        n_stages = (
+            dec.puncture.stages_for(l_cell) if serial else l_cell
+        )
+        path = self._pick_path(code_name, slo, f_cell, n_stages)
+        fn = self._decode_fn(code_name, path, f_cell, l_cell)
+        bits = np.asarray(fn(jnp.asarray(dense)))
+        for i, (ticket, _) in enumerate(entries):
+            ticket.bits = bits[i, : ticket.n_out].astype(np.int32)
+            ticket.done = True
+            ticket.completed = now
+            ticket.cell = (code_name, slo, l_cell, f_cell)
+            ticket.path = path
+            self._sojourns[slo].append(now - ticket.submitted)
+        self._counts["completed"] += k
+        self._counts["batches"] += 1
+        self._counts[f"path/{path}"] += 1
+        self._counts["frames_real"] += k
+        self._counts["frames_cell"] += f_cell
+        self._elems["real"] += real_elems
+        self._elems["cell"] += int(np.prod(shape))
+        self.batch_log.append(
+            dict(
+                cell=(code_name, slo, l_cell),
+                f_cell=f_cell,
+                n_real=k,
+                path=path,
+                tickets=[t.id for t, _ in entries],
+                wait=now - entries[0][0].submitted,
+            )
+        )
+        return [t for t, _ in entries]
+
+    # -- sessions (stateful chunked streaming, DESIGN.md §10) -------------
+
+    def open_session(
+        self,
+        code: str = "ccsds-k7",
+        sid: Optional[str] = None,
+        now: Optional[float] = None,
+    ) -> str:
+        """Register a chunked-streaming tenant; returns its session id.
+        Overflowing ``session_capacity`` evicts (flushes) the
+        least-recently-used session first."""
+        now = time.monotonic() if now is None else now
+        dec = self._decoder(code)  # validates the code name
+        sid = sid if sid is not None else f"s{next(self._sids)}"
+        if sid in self._sessions:
+            raise ValueError(f"session {sid!r} already open")
+        while len(self._sessions) >= self.session_capacity:
+            self._evict_lru(now)
+        self._sessions[sid] = _Session(
+            sid=sid,
+            code=code,
+            state=dec.init_stream_state(1, initial_state=None),
+            pending=collections.deque(),
+            last_used=now,
+        )
+        self._counts["sessions_opened"] += 1
+        return sid
+
+    def _shape_chunk(self, dec: ViterbiDecoder, llrs: np.ndarray):
+        """One session chunk -> shaped (1, c, beta) stages.  Punctured
+        sessions submit serial kept-LLR chunks in whole pattern periods
+        (so per-chunk depuncturing equals whole-stream depuncturing);
+        stage counts must sit on the rho grid (ring steps are radix)."""
+        llrs = np.asarray(llrs, np.float32)
+        if dec.puncture is not None:
+            if llrs.ndim != 1:
+                raise ValueError(
+                    "punctured sessions take serial (Lp,) chunks, got "
+                    f"shape {llrs.shape}"
+                )
+            kept = dec.puncture.n_kept
+            if llrs.shape[0] % kept:
+                raise ValueError(
+                    f"serial session chunks must be whole puncture "
+                    f"periods ({kept} kept LLRs); got {llrs.shape[0]}"
+                )
+            shaped = np.asarray(dec.depunctured(llrs[None]))
+        else:
+            if llrs.ndim != 2 or llrs.shape[1] != dec.spec.beta:
+                raise ValueError(
+                    f"session chunks are (c, beta={dec.spec.beta}) "
+                    f"stages, got shape {llrs.shape}"
+                )
+            shaped = llrs[None]
+        if shaped.shape[1] % dec.rho:
+            raise ValueError(
+                f"chunk stage count {shaped.shape[1]} not divisible by "
+                f"rho={dec.rho}"
+            )
+        return shaped
+
+    def submit_chunk(
+        self, sid: str, llrs: np.ndarray, now: Optional[float] = None
+    ) -> Ticket:
+        """Queue one LLR chunk on a session; the ticket completes (with
+        the bits that became final) at the next poll/drain."""
+        now = time.monotonic() if now is None else now
+        sess = self._sessions[sid]
+        shaped = self._shape_chunk(self._decoder(sess.code), llrs)
+        ticket = Ticket(
+            id=next(self._ids),
+            code=sess.code,
+            slo="throughput",
+            submitted=now,
+            n_out=-1,  # emission depends on stream position
+        )
+        if self.queue_depth() >= self.max_pending:
+            ticket.dropped = True
+            self._counts["rejected"] += 1
+            return ticket
+        sess.pending.append((ticket, shaped))
+        self._sessions.move_to_end(sid)
+        sess.last_used = now
+        self._counts["submitted"] += 1
+        return ticket
+
+    def _run_sessions(self, now: float) -> List[Ticket]:
+        """Drain pending session chunks, one chunk per session per
+        round, rounds grouped by (code, chunk steps) into fused
+        ``decode_chunk_multi`` dispatches of at most ``max_batch``
+        sessions each — sessions at different stream positions batch
+        together (the per-state emission slice keeps each
+        bit-identical to a solo drive)."""
+        done: List[Ticket] = []
+        while True:
+            groups: Dict[Tuple, List[_Session]] = {}
+            for sid in sorted(self._sessions):
+                sess = self._sessions[sid]
+                if sess.pending:
+                    key = (sess.code, sess.pending[0][1].shape[1])
+                    groups.setdefault(key, []).append(sess)
+            if not groups:
+                return done
+            for (code_name, c), sessions in sorted(groups.items()):
+                for lo in range(0, len(sessions), self.max_batch):
+                    done.extend(self._dispatch_session_group(
+                        code_name, c,
+                        sessions[lo: lo + self.max_batch], now,
+                    ))
+
+    def _dispatch_session_group(
+        self, code_name: str, c: int, sessions: List[_Session], now: float
+    ) -> List[Ticket]:
+        """One fused dispatch of <= max_batch sessions' head chunks."""
+        dec = self._decoder(code_name)
+        tickets, chunks, states = [], [], []
+        for sess in sessions:
+            ticket, shaped = sess.pending.popleft()
+            tickets.append(ticket)
+            chunks.append(shaped)
+            states.append(sess.state)
+        k = len(sessions)
+        f_cell = pick_cell_frames(k, self.max_batch)
+        if f_cell > k:  # pad with throwaway zero states
+            states.append(dec.init_stream_state(f_cell - k))
+            chunks.append(
+                np.zeros((f_cell - k, c, dec.spec.beta), np.float32)
+            )
+        key = (code_name, "session", f_cell, c)
+        if key in self._fns:
+            self._fn_hits += 1
+        else:
+            self._fn_misses += 1
+            self._fns[key] = dec.decode_chunk_multi
+        new_states, outs = self._fns[key](states, chunks)
+        done: List[Ticket] = []
+        for sess, ticket, state, out in zip(
+            sessions, tickets, new_states, outs
+        ):
+            sess.state = state
+            sess.consumed_steps += c
+            ticket.bits = np.asarray(out[0]).astype(np.int32)
+            ticket.n_out = ticket.bits.shape[0]
+            ticket.done = True
+            ticket.completed = now
+            ticket.path = "session"
+            done.append(ticket)
+            self._sojourns["throughput"].append(now - ticket.submitted)
+        self._counts["completed"] += k
+        self._counts["batches"] += 1
+        self._counts["path/session"] += 1
+        self._counts["frames_real"] += k
+        self._counts["frames_cell"] += f_cell
+        self._elems["real"] += k * c * dec.spec.beta
+        self._elems["cell"] += f_cell * c * dec.spec.beta
+        self.batch_log.append(
+            dict(
+                cell=(code_name, "session", c),
+                f_cell=f_cell,
+                n_real=k,
+                path="session",
+                tickets=[t.id for t in tickets],
+                wait=0.0,
+            )
+        )
+        return done
+
+    def close_session(
+        self, sid: str, now: Optional[float] = None
+    ) -> np.ndarray:
+        """Finish a session: decode its pending chunks (solo — other
+        sessions' queues are untouched), flush the survivor ring,
+        remove it.  Returns the tail bits (the decisions still inside
+        the decision-depth window).  Chunk tickets completed here are
+        also delivered by the NEXT poll/drain, so the poll contract
+        ("every completed ticket appears in exactly one return list")
+        holds across out-of-band closes and evictions."""
+        now = time.monotonic() if now is None else now
+        sess = self._sessions[sid]
+        while sess.pending:  # decode in order, this session only
+            self._done_buffer.extend(self._dispatch_session_group(
+                sess.code, sess.pending[0][1].shape[1], [sess], now
+            ))
+        dec = self._decoder(sess.code)
+        tail = np.asarray(dec.flush_stream(sess.state))[0].astype(np.int32)
+        del self._sessions[sid]
+        self._counts["sessions_closed"] += 1
+        return tail
+
+    def _evict_lru(self, now: float):
+        """Session-table overflow (DESIGN.md §10): flush the
+        least-recently-used session exactly as close_session would —
+        eviction is a forced close, so evicted tenants lose no bits —
+        and park the tail in ``evicted_tail``."""
+        sid = next(iter(self._sessions))
+        self._evicted[sid] = self.close_session(sid, now)
+        while len(self._evicted) > 64:  # bounded: unread tails expire
+            self._evicted.popitem(last=False)
+        self._counts["sessions_evicted"] += 1
+        self._counts["sessions_closed"] -= 1  # counted as eviction
+
+    def evicted_tail(self, sid: str) -> np.ndarray:
+        """Tail bits of an evicted session (kept until read once)."""
+        return self._evicted.pop(sid)
+
+    # -- convenience / stats ----------------------------------------------
+
+    def decode(
+        self, requests: List[DecodeRequest], now: float = 0.0
+    ) -> List[np.ndarray]:
+        """Submit + drain in one call; returns bits per request, in
+        request order (the batch-oriented test/offline entry point)."""
+        tickets = [self.submit(r, now=now) for r in requests]
+        self.drain(now=now)
+        if any(t.dropped for t in tickets):
+            raise RuntimeError("backpressure drop inside decode()")
+        return [t.bits for t in tickets]
+
+    def stats(self) -> dict:
+        """Operator counters (schema documented in DESIGN.md §10)."""
+        cell_frames = self._counts["frames_cell"]
+        cell_elems = self._elems["cell"]
+        lat = {}
+        for slo, xs in self._sojourns.items():
+            if xs:
+                arr = np.asarray(xs)
+                lat[slo] = {
+                    "n": int(arr.size),
+                    "p50": float(np.percentile(arr, 50)),
+                    "p99": float(np.percentile(arr, 99)),
+                }
+        return {
+            "submitted": self._counts["submitted"],
+            "completed": self._counts["completed"],
+            "rejected": self._counts["rejected"],
+            "batches": self._counts["batches"],
+            "queue_depth": self.queue_depth(),
+            "sessions": len(self._sessions),
+            "sessions_evicted": self._counts["sessions_evicted"],
+            "paths": {
+                k.split("/", 1)[1]: v
+                for k, v in self._counts.items()
+                if k.startswith("path/")
+            },
+            "occupancy": (
+                self._counts["frames_real"] / cell_frames
+                if cell_frames else 0.0
+            ),
+            "padding_waste": (
+                1.0 - self._elems["real"] / cell_elems
+                if cell_elems else 0.0
+            ),
+            "jit_cache": {
+                "hits": self._fn_hits,
+                "misses": self._fn_misses,
+                "entries": len(self._fns),
+            },
+            "latency": lat,
+        }

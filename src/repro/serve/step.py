@@ -1,5 +1,6 @@
-"""Serving step factories: LM prefill / decode, and the paper's Viterbi
-stream-decode service."""
+"""Serving step factories: LM prefill / decode, the paper's Viterbi
+stream-decode service (DESIGN.md §6), and the multi-tenant
+``DecodeEngine`` factory (DESIGN.md §10)."""
 from __future__ import annotations
 
 import functools
@@ -15,6 +16,7 @@ __all__ = [
     "make_decode_step",
     "make_viterbi_serve_step",
     "make_viterbi_decoder",
+    "make_decode_engine",
 ]
 
 
@@ -45,6 +47,21 @@ def make_viterbi_decoder(vcfg, precision=None, use_kernel: bool = False,
         use_kernel=use_kernel,
         decision_depth=decision_depth,
     )
+
+
+def make_decode_engine(precision=None, use_kernel: bool = False, **kw):
+    """The multi-tenant serving entry point (DESIGN.md §10): a
+    ``repro.serve.engine.DecodeEngine`` that buckets ragged
+    mixed-code/mixed-SLO requests into padded (F, T) cells and routes
+    each assembled batch to the right decode path.  Unlike the step
+    factories above it is stateful (queues, jit-fn cache, session
+    table), so it is driven with submit/poll/drain rather than wrapped
+    in jit — see ``launch/serve.py --service engine``.  Keyword
+    arguments pass through to ``DecodeEngine`` (max_batch, max_wait,
+    session_capacity, mesh, ...)."""
+    from repro.serve.engine import DecodeEngine
+
+    return DecodeEngine(precision=precision, use_kernel=use_kernel, **kw)
 
 
 def make_viterbi_serve_step(vcfg, precision=None, use_kernel: bool = False,

@@ -1,0 +1,361 @@
+"""Multi-tenant DecodeEngine (DESIGN.md §10): cell bucketing
+determinism, bit-exactness of engine output vs direct ViterbiDecoder
+decode for every registry code (punctured + tail-biting), SLO -> path
+routing, session eviction/flush equivalence to uninterrupted chunked
+streaming, jit-cache hit accounting, and the max-wait / backpressure
+policies — all on the virtual clock, so every assertion is
+deterministic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.codes import REGISTRY, encode_standard, get_code, standard_llrs
+from repro.core.decoder import ViterbiDecoder
+from repro.core.kernel_geometry import pick_cell_frames, pick_cell_length
+from repro.serve.engine import DecodeEngine, DecodeRequest
+
+
+def _request(code_name, n_bits, slo, seed, ebn0=5.0):
+    """(true bits, DecodeRequest) through the standard tx chain."""
+    rng = np.random.default_rng(seed)
+    code = get_code(code_name)
+    bits = jnp.asarray(rng.integers(0, 2, (1, n_bits)), jnp.int32)
+    llrs = standard_llrs(
+        jax.random.PRNGKey(seed), encode_standard(bits, code), ebn0, code
+    )
+    return np.asarray(bits)[0], DecodeRequest(
+        llrs=np.asarray(llrs)[0], code=code_name, slo=slo
+    )
+
+
+def _direct(code_name, llrs):
+    """The engine's decode contract, run directly: uniform initial
+    metrics + argmax traceback (WAVA for tail-biting codes)."""
+    dec = ViterbiDecoder.from_standard(code_name)
+    if dec.termination == "tailbiting":
+        return np.asarray(dec.decode_tailbiting(llrs[None])[0])[0]
+    return np.asarray(
+        dec.decode_batch(llrs[None], initial_state=None, final_state=None)
+    )[0]
+
+
+def test_cell_rungs():
+    """Bucketing geometry (DESIGN.md §10): power-of-two ladders with a
+    floor, punctured multiples, and the frame-rung cap."""
+    assert pick_cell_length(1) == 64
+    assert pick_cell_length(64) == 64
+    assert pick_cell_length(65) == 128
+    assert pick_cell_length(129, multiple=3) == 258
+    with pytest.raises(ValueError):
+        pick_cell_length(0)
+    assert pick_cell_frames(1, 32) == 1
+    assert pick_cell_frames(5, 32) == 8
+    assert pick_cell_frames(33, 32) == 32
+    assert pick_cell_frames(40, 48) == 48
+
+
+def test_engine_bitexact_every_registry_code():
+    """Engine output == direct ViterbiDecoder decode, bit for bit, for
+    a mixed ragged workload over EVERY registry standard — ragged
+    lengths pad to cell rungs with trailing zero LLRs (information-free
+    stages, the §7 erasure argument), tail-biting cells stay
+    exact-length."""
+    reqs, refs = [], []
+    for i, name in enumerate(sorted(REGISTRY)):
+        tb = REGISTRY[name].termination == "tailbiting"
+        for j, n in enumerate((40,) if tb else (57, 90)):
+            _, req = _request(name, n, "throughput", 31 * i + j)
+            reqs.append(req)
+            refs.append(_direct(name, req.llrs))
+    engine = DecodeEngine(max_batch=8)
+    outs = engine.decode(reqs)
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(out, ref)
+    s = engine.stats()
+    assert s["completed"] == len(reqs)
+    assert s["queue_depth"] == 0
+
+
+def test_bucketing_deterministic():
+    """Two fresh engines fed the same timed submissions assemble the
+    same cells in the same order and produce identical bits."""
+    reqs = []
+    for i in range(10):
+        _, req = _request("ccsds-k7", 48 + 7 * i, "throughput", seed=i)
+        reqs.append(req)
+    logs, outs = [], []
+    for _ in range(2):
+        engine = DecodeEngine(max_batch=4)
+        outs.append(engine.decode(reqs))
+        logs.append([
+            (b["cell"], b["f_cell"], b["n_real"], b["path"], b["tickets"])
+            for b in engine.batch_log
+        ])
+    assert logs[0] == logs[1]
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_slo_routing_table():
+    """The §10 routing table: tail-biting -> wava regardless of SLO;
+    latency-class cells that underfill the (injected) device budget ->
+    time_parallel, bit-identical to the sequential path; throughput ->
+    dense batch."""
+    engine = DecodeEngine(underfill_rows=1024)
+    bits_tp, req_tp = _request("ccsds-k7", 512, "latency", seed=3)
+    t_tp = engine.submit(req_tp, now=0.0)
+    _, req_bat = _request("ccsds-k7", 512, "throughput", seed=4)
+    t_bat = engine.submit(req_bat, now=0.0)
+    _, req_tb = _request("lte-tbcc", 40, "latency", seed=5)
+    t_tb = engine.submit(req_tb, now=0.0)
+    engine.drain(now=0.0)
+    assert (t_tp.path, t_bat.path, t_tb.path) == (
+        "time_parallel", "batch", "wava"
+    )
+    np.testing.assert_array_equal(t_tp.bits, _direct("ccsds-k7", req_tp.llrs))
+    np.testing.assert_array_equal(
+        t_bat.bits, _direct("ccsds-k7", req_bat.llrs)
+    )
+    # CPU budget (underfill_rows=0) keeps latency traffic sequential
+    engine_cpu = DecodeEngine(underfill_rows=0)
+    t_seq = engine_cpu.submit(req_tp, now=0.0)
+    engine_cpu.drain(now=0.0)
+    assert t_seq.path == "batch"
+    np.testing.assert_array_equal(t_seq.bits, t_tp.bits)
+
+
+def test_sharded_dispatch():
+    """Cells whose frame rung fills the mesh route onto the §6 sharded
+    frame decoder and stay bit-identical (1 CPU device: every rung
+    fills it)."""
+    from repro.distributed.decoder import engine_dispatch_ready, frame_mesh
+
+    mesh = frame_mesh()
+    assert engine_dispatch_ready(1, mesh)
+    engine = DecodeEngine(mesh=mesh, max_batch=4)
+    refs, reqs = [], []
+    for i in range(4):
+        _, req = _request("ccsds-k7", 70, "throughput", seed=20 + i)
+        reqs.append(req)
+        refs.append(_direct("ccsds-k7", req.llrs))
+    outs = engine.decode(reqs)
+    assert engine.batch_log[0]["path"] == "sharded"
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_jit_cache_no_recompile_same_cell():
+    """Repeated same-cell batches hit the engine's fn cache (and so
+    jax's trace cache): misses stay flat, hits climb."""
+    engine = DecodeEngine(max_batch=4)
+    for round_ in range(3):
+        reqs = [
+            _request("ccsds-k7", 60, "throughput", seed=50 + 4 * round_ + i)[1]
+            for i in range(4)
+        ]
+        engine.decode(reqs)
+        cache = engine.stats()["jit_cache"]
+        assert cache["misses"] == 1
+        assert cache["hits"] == round_
+        assert cache["entries"] == 1
+
+
+def test_max_wait_and_backpressure():
+    """Assembly policy on the virtual clock: a lone latency request
+    waits max_wait then flushes; a full cell flushes immediately; past
+    max_pending, submissions are dropped with the rejected counter."""
+    engine = DecodeEngine(
+        max_batch=4, max_wait={"latency": 0.001, "throughput": 0.010}
+    )
+    _, req = _request("ccsds-k7", 60, "latency", seed=70)
+    t = engine.submit(req, now=0.0)
+    assert engine.poll(now=0.0005) == []  # deadline not reached
+    assert not t.done
+    done = engine.poll(now=0.0011)
+    assert done == [t] and t.done and t.sojourn == pytest.approx(0.0011)
+    # a full cell flushes at once, before any deadline
+    tickets = [
+        engine.submit(_request("ccsds-k7", 60, "latency", 71 + i)[1], now=0.1)
+        for i in range(4)
+    ]
+    assert all(x.done for x in engine.poll(now=0.1))
+    assert all(t.done for t in tickets)
+    # backpressure
+    engine2 = DecodeEngine(max_pending=1)
+    a = engine2.submit(req, now=0.0)
+    b = engine2.submit(req, now=0.0)
+    assert not a.dropped and b.dropped
+    assert engine2.stats()["rejected"] == 1
+
+
+def test_session_multi_tenant_equivalence():
+    """Sessions at DIFFERENT stream positions fuse into one dispatch
+    and each still equals uninterrupted decode_stream_chunked; closing
+    flushes the ring tail."""
+    rng = np.random.default_rng(8)
+    dec = ViterbiDecoder.from_standard("ccsds-k7", decision_depth=256)
+    llr_a = rng.normal(0, 1, (1, 1024, 2)).astype(np.float32)
+    llr_b = rng.normal(0, 1, (1, 768, 2)).astype(np.float32)
+    ref_a = np.asarray(
+        dec.decode_stream_chunked(llr_a, chunk_len=256, initial_state=None)
+    )[0]
+    ref_b = np.asarray(
+        dec.decode_stream_chunked(llr_b, chunk_len=256, initial_state=None)
+    )[0]
+    engine = DecodeEngine(decision_depth=256)
+    sa = engine.open_session("ccsds-k7", now=0.0)
+    t0 = engine.submit_chunk(sa, llr_a[0, :256], now=0.0)
+    engine.poll(now=0.0)  # A is now 256 stages ahead of B
+    sb = engine.open_session("ccsds-k7", now=0.1)
+    got = {sa: [t0.bits], sb: []}
+    for lo in range(0, 768, 256):
+        t1 = engine.submit_chunk(sa, llr_a[0, 256 + lo: 512 + lo], now=0.2)
+        t2 = engine.submit_chunk(sb, llr_b[0, lo: lo + 256], now=0.2)
+        done = engine.poll(now=0.2)
+        assert {t1.id, t2.id} == {t.id for t in done}
+        assert engine.batch_log[-1]["n_real"] == 2  # fused dispatch
+        got[sa].append(t1.bits)
+        got[sb].append(t2.bits)
+    got[sa].append(engine.close_session(sa))
+    got[sb].append(engine.close_session(sb))
+    np.testing.assert_array_equal(np.concatenate(got[sa]), ref_a)
+    np.testing.assert_array_equal(np.concatenate(got[sb]), ref_b)
+    assert engine.stats()["sessions"] == 0
+
+
+def test_session_punctured_serial_chunks():
+    """Punctured sessions consume serial kept-LLR chunks in whole
+    pattern periods; per-chunk depuncture == whole-stream depuncture,
+    so the engine stream equals decode_stream_chunked on the serial
+    stream."""
+    rng = np.random.default_rng(9)
+    dec = ViterbiDecoder.from_standard("wifi-11a-r34", decision_depth=256)
+    serial = rng.normal(0, 1, (1, 512)).astype(np.float32)  # 512 % 4 == 0
+    ref = np.asarray(
+        dec.decode_stream_chunked(serial, chunk_len=4096, initial_state=None)
+    )[0]
+    engine = DecodeEngine(decision_depth=256)
+    sid = engine.open_session("wifi-11a-r34", now=0.0)
+    outs = []
+    for lo in range(0, 512, 128):
+        t = engine.submit_chunk(sid, serial[0, lo: lo + 128], now=0.0)
+        engine.poll(now=0.0)
+        outs.append(t.bits)
+    outs.append(engine.close_session(sid))
+    np.testing.assert_array_equal(np.concatenate(outs), ref)
+    with pytest.raises(ValueError):  # partial period rejected
+        sid2 = engine.open_session("wifi-11a-r34", now=0.0)
+        engine.submit_chunk(sid2, serial[0, :126], now=0.0)
+
+
+def test_session_eviction_is_forced_flush():
+    """LRU eviction == close_session: the evicted tenant's chunk bits
+    plus the parked tail equal uninterrupted chunked streaming over
+    exactly what it consumed."""
+    rng = np.random.default_rng(10)
+    dec = ViterbiDecoder.from_standard("ccsds-k7", decision_depth=256)
+    llr = rng.normal(0, 1, (1, 512, 2)).astype(np.float32)
+    engine = DecodeEngine(decision_depth=256, session_capacity=2)
+    s1 = engine.open_session("ccsds-k7", now=0.0)
+    s2 = engine.open_session("ccsds-k7", now=0.1)
+    t = engine.submit_chunk(s1, llr[0], now=0.2)
+    engine.poll(now=0.2)  # touches s1 -> s2 is now LRU
+    engine.open_session("ccsds-k7", now=0.3)  # evicts s2
+    s = engine.stats()
+    assert s["sessions_evicted"] == 1 and s["sessions"] == 2
+    assert engine.evicted_tail(s2).shape == (0,)  # consumed nothing
+    # evict s1 too: emitted + tail == uninterrupted streaming
+    engine.open_session("ccsds-k7", now=0.4)
+    got = np.concatenate([t.bits, engine.evicted_tail(s1)])
+    ref = np.asarray(
+        dec.decode_stream_chunked(llr, chunk_len=512, initial_state=None)
+    )[0]
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_decode_chunk_multi_matches_solo():
+    """Decoder-level contract under the engine: decode_chunk_multi on
+    states at different positions == each state driven alone."""
+    rng = np.random.default_rng(11)
+    dec = ViterbiDecoder.from_standard("ccsds-k7", decision_depth=128)
+    a = rng.normal(0, 1, (1, 192, 2)).astype(np.float32)
+    b = rng.normal(0, 1, (2, 192, 2)).astype(np.float32)
+    sa = dec.init_stream_state(1, initial_state=None)
+    sb = dec.init_stream_state(2, initial_state=None)
+    sa, _ = dec.decode_chunk(sa, a)  # advance A only
+    ref_a, _ = dec.decode_chunk(sa, a)
+    ref_b, _ = dec.decode_chunk(sb, b)
+    (got_a, got_b), outs = dec.decode_chunk_multi([sa, sb], [a, b])
+    solo_a = dec.decode_chunk(sa, a)[1]
+    solo_b = dec.decode_chunk(sb, b)[1]
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(solo_a))
+    np.testing.assert_array_equal(np.asarray(outs[1]), np.asarray(solo_b))
+    np.testing.assert_array_equal(np.asarray(got_a.lam), np.asarray(ref_a.lam))
+    np.testing.assert_array_equal(np.asarray(got_b.hist),
+                                  np.asarray(ref_b.hist))
+    assert got_a.pos == ref_a.pos and got_b.pos == ref_b.pos
+    with pytest.raises(ValueError):
+        dec.decode_chunk_multi([sa], [a, b])
+    with pytest.raises(ValueError):
+        dec.decode_chunk_multi([sa, sb], [a, b[:, :96]])
+
+
+def test_session_groups_respect_max_batch():
+    """More concurrent sessions than max_batch split into several fused
+    dispatches — the frame cap holds and occupancy never exceeds 1."""
+    rng = np.random.default_rng(12)
+    engine = DecodeEngine(decision_depth=128, max_batch=2)
+    sids = [engine.open_session("ccsds-k7", now=0.0) for _ in range(3)]
+    for sid in sids:
+        engine.submit_chunk(
+            sid, rng.normal(0, 1, (128, 2)).astype(np.float32), now=0.0
+        )
+    engine.poll(now=0.0)
+    session_batches = [b for b in engine.batch_log if b["path"] == "session"]
+    assert [b["n_real"] for b in session_batches] == [2, 1]
+    assert all(b["f_cell"] <= 2 for b in session_batches)
+    assert engine.stats()["occupancy"] <= 1.0
+
+
+def test_close_session_leaves_other_tenants_queued():
+    """close_session drains only its own session; another tenant's
+    pending chunk stays queued and completes at the next poll — and a
+    ticket completed out of band by a close is delivered by the next
+    poll exactly once."""
+    rng = np.random.default_rng(13)
+    engine = DecodeEngine(decision_depth=128)
+    sa = engine.open_session("ccsds-k7", now=0.0)
+    sb = engine.open_session("ccsds-k7", now=0.0)
+    ta = engine.submit_chunk(
+        sa, rng.normal(0, 1, (128, 2)).astype(np.float32), now=0.0
+    )
+    tb = engine.submit_chunk(
+        sb, rng.normal(0, 1, (128, 2)).astype(np.float32), now=0.0
+    )
+    engine.close_session(sa, now=0.0)
+    assert ta.done and not tb.done  # B untouched by A's close
+    assert engine._sessions[sb].pending
+    done = engine.poll(now=0.0)
+    assert {t.id for t in done} == {ta.id, tb.id}  # ta delivered once
+    assert not engine.poll(now=0.0)  # ...and only once
+
+
+def test_request_validation():
+    engine = DecodeEngine()
+    with pytest.raises(ValueError):  # punctured code wants serial LLRs
+        engine.submit(DecodeRequest(
+            np.zeros((32, 2), np.float32), "wifi-11a-r34", "latency"
+        ), now=0.0)
+    with pytest.raises(ValueError):  # wrong beta
+        engine.submit(DecodeRequest(
+            np.zeros((32, 2), np.float32), "lte-tbcc", "latency"
+        ), now=0.0)
+    with pytest.raises(ValueError):  # unknown SLO class
+        engine.submit(DecodeRequest(
+            np.zeros((32, 2), np.float32), "ccsds-k7", "gold"
+        ), now=0.0)
+    with pytest.raises(KeyError):  # unknown code
+        engine.submit(DecodeRequest(
+            np.zeros((32, 2), np.float32), "nope", "latency"
+        ), now=0.0)
