@@ -71,6 +71,60 @@ def bench_standards(ebn0_dbs=(4.0, 6.0), n_bits: int = 20_000, grid=None):
     return rows
 
 
+def bench_farm(
+    codes=("ccsds-k7", "wifi-11a-r34", "lte-tbcc", "gsm-cs1"),
+    ebn0_dbs=(3.0, 4.5, 6.0),
+    paths=("reference", "kernel", "time_parallel", "engine"),
+    frames_per_point: int = 128,
+    frame_budget: int = 256,
+    batch_frames: int = 16,
+    seed: int = 0,
+):
+    """The Monte-Carlo BER farm + statistical regression gate
+    (DESIGN.md §11): every (code, Eb/N0, decode path) cell reports its
+    error counts with Clopper-Pearson confidence bounds, and every
+    accelerated path is gated against the reference decode at matched
+    noise realizations.  Zero-error cells report their one-sided upper
+    bound (never 0.0) and are tagged ``upper`` in the derived column."""
+    from repro.verify import BerFarm, run_gate
+
+    farm = BerFarm(
+        codes=codes, ebn0_dbs=ebn0_dbs, paths=paths,
+        frames_per_point=frames_per_point, frame_budget=frame_budget,
+        batch_frames=batch_frames, seed=seed,
+    )
+    points = farm.run()
+    verdicts = run_gate(points)
+    gate_by_cell = {(v.code, v.path, v.ebn0_db): v for v in verdicts}
+    rows = []
+    for p in points:
+        est = p.estimate()
+        v = gate_by_cell.get((p.code, p.path, p.ebn0_db))
+        gate = "ref" if p.path == "reference" else (
+            "pass" if v is not None and v.passed else "fail"
+        )
+        rows.append(
+            (
+                f"farm/{p.code}/{p.path}/ebn0={p.ebn0_db:g}",
+                p.seconds * 1e6 / max(p.n_frames, 1),
+                f"ber={est.ber:.3e};lo={est.ci_lo:.3e};hi={est.ci_hi:.3e}"
+                f";errors={p.bit_errors};bits={p.n_bits}"
+                f";fer={p.fer:.3e};gate={gate}"
+                f"{';upper' if est.upper_bound else ''}",
+            )
+        )
+    n_pass = sum(v.passed for v in verdicts)
+    rows.append(
+        (
+            "farm/gate-summary",
+            0.0,
+            f"pass={n_pass}/{len(verdicts)}"
+            f";gate={'pass' if n_pass == len(verdicts) else 'fail'}",
+        )
+    )
+    return rows
+
+
 def bench(ebn0_dbs=(2.0, 3.0, 4.0, 5.0), n_bits: int = 200_000):
     spec = CODE_K7_CCSDS
     cfg = TiledDecoderConfig(frame_len=64, overlap=48)
@@ -94,5 +148,5 @@ def bench(ebn0_dbs=(2.0, 3.0, 4.0, 5.0), n_bits: int = 200_000):
 
 
 if __name__ == "__main__":
-    for r in bench() + bench_standards():
+    for r in bench() + bench_standards() + bench_farm():
         print(",".join(str(x) for x in r))

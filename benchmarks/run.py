@@ -9,6 +9,9 @@ the perf trajectory is tracked across PRs:
   * bench_throughput — Table I (precision combos, decode throughput)
                        + serving-mode matrix (tiled/chunked/sharded/batch)
   * bench_ber        — Fig. 13 (BER vs Eb/N0 per precision, + hard/soft)
+                       + the §11 Monte-Carlo farm: CI-bounded BER per
+                       (code, Eb/N0, decode path) cell with the
+                       statistical regression gate verdict
   * standards        — the code×rate grid (DESIGN.md §7): throughput +
                        BER rows for every registry standard (punctured
                        802.11a/DVB-S rates, LTE tail-biting WAVA, GSM)
@@ -45,6 +48,14 @@ _OCCUPANCY = re.compile(r"occupancy=([0-9.]+)")
 _WASTE = re.compile(r"waste=([0-9.]+)")
 _P50 = re.compile(r"p50=([0-9.]+)ms")
 _P99 = re.compile(r"p99=([0-9.]+)ms")
+# §11 farm-suite columns: Clopper-Pearson CI bounds, raw integer
+# counts, and the regression-gate verdict per (code, path, Eb/N0) cell
+_BER = re.compile(r"ber=([0-9.e+-]+)")
+_CI_LO = re.compile(r"lo=([0-9.e+-]+)")
+_CI_HI = re.compile(r"hi=([0-9.e+-]+)")
+_ERRORS = re.compile(r"errors=([0-9]+)")
+_BITS = re.compile(r"bits=([0-9]+)")
+_GATE = re.compile(r"gate=(pass|fail|ref)")
 
 
 def _artifact_rows(rows):
@@ -91,6 +102,26 @@ def _artifact_rows(rows):
         m = _P99.search(row["derived"])
         if m:
             row["p99_ms"] = float(m.group(1))
+        m = _BER.search(row["derived"])
+        if m:
+            row["ber"] = float(m.group(1))
+        m = _CI_LO.search(row["derived"])
+        if m:
+            row["ci_lo"] = float(m.group(1))
+        m = _CI_HI.search(row["derived"])
+        if m:
+            row["ci_hi"] = float(m.group(1))
+        m = _ERRORS.search(row["derived"])
+        if m:
+            row["bit_errors"] = int(m.group(1))
+        m = _BITS.search(row["derived"])
+        if m:
+            row["n_bits"] = int(m.group(1))
+        m = _GATE.search(row["derived"])
+        if m:
+            row["gate"] = m.group(1)
+        if ";upper" in row["derived"]:
+            row["upper_bound"] = True
         out.append(row)
     return out
 
@@ -149,6 +180,14 @@ def main() -> None:
         "ber": lambda: bench_ber.bench(
             ebn0_dbs=(3.0, 4.0) if args.fast else (2.0, 3.0, 4.0),
             n_bits=50_000 if args.fast else 400_000,
+        ) + bench_ber.bench_farm(
+            codes=("ccsds-k7", "lte-tbcc") if args.fast else (
+                "ccsds-k7", "wifi-11a-r34", "lte-tbcc", "gsm-cs1"
+            ),
+            ebn0_dbs=(3.0, 6.0) if args.fast else (3.0, 4.5, 6.0),
+            paths=("reference", "kernel", "time_parallel") if args.fast
+            else ("reference", "kernel", "time_parallel", "engine"),
+            frames_per_point=32 if args.fast else 128,
         ),
         "standards": lambda: bench_throughput.bench_standards(
             n_frames=8 if args.fast else 64,

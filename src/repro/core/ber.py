@@ -1,12 +1,22 @@
-"""BER measurement harness (paper §IX-B, Fig. 12 block diagram).
+"""BER measurement harness + binomial estimator layer (paper §IX-B,
+Fig. 12 block diagram; DESIGN.md §11).
 
 transmitter (random bits -> conv encoder) -> AWGN channel -> receiver
 (LLR former -> Viterbi decoder) -> compare with the source bits.
+
+The estimator layer turns raw (errors, bits) counts into confidence-
+bounded BER estimates: Wilson score and Clopper-Pearson (exact) binomial
+intervals, and the one-sided zero-error upper bound — a grid cell that
+observed 0 errors over n bits reports ``1 - (1-conf)^(1/n)`` (the exact
+Clopper-Pearson bound whose small-n face is the "rule of three" 3/n),
+never 0.0: finite frames cannot claim infinite precision.  The
+``repro.verify`` farm and its regression gates are built on these.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+import math
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +27,201 @@ from .encoder import conv_encode_jax
 from .trellis import CodeSpec
 from .viterbi import AcsPrecision, TiledDecoderConfig, tiled_decode_stream
 
-__all__ = ["BerPoint", "measure_ber", "ber_curve", "uncoded_ber_theory"]
+__all__ = [
+    "BerPoint",
+    "BerEstimate",
+    "estimate_ber",
+    "wilson_interval",
+    "clopper_pearson",
+    "zero_error_upper",
+    "rule_of_three",
+    "measure_ber",
+    "ber_curve",
+    "uncoded_ber_theory",
+]
+
+DEFAULT_CONFIDENCE = 0.99
+
+
+# ---------------------------------------------------------------------------
+# Binomial proportion intervals (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _norm_ppf(q: float) -> float:
+    """Standard-normal quantile.  scipy when available, else the
+    Acklam rational approximation (|rel err| < 1.15e-9 — far below any
+    tolerance a BER interval carries)."""
+    try:
+        from scipy.special import ndtri
+
+        return float(ndtri(q))
+    except ImportError:  # pragma: no cover - scipy ships with jax here
+        pass
+    if not 0.0 < q < 1.0:
+        raise ValueError(f"quantile must be in (0, 1), got {q}")
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    p_low = 0.02425
+    if q < p_low:
+        u = math.sqrt(-2.0 * math.log(q))
+        return (((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4])
+                * u + c[5]) / ((((d[0] * u + d[1]) * u + d[2]) * u + d[3])
+                               * u + 1.0)
+    if q > 1.0 - p_low:
+        return -_norm_ppf(1.0 - q)
+    u = q - 0.5
+    r = u * u
+    return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4])
+            * r + a[5]) * u / (((((b[0] * r + b[1]) * r + b[2]) * r
+                                 + b[3]) * r + b[4]) * r + 1.0)
+
+
+def _beta_ppf(q: float, a: float, b: float) -> float:
+    """Quantile of Beta(a, b).  scipy's betaincinv when available, else
+    bisection on the regularized incomplete beta (jax.scipy.special) —
+    60 halvings pin the root to ~1e-18 absolute."""
+    try:
+        from scipy.special import betaincinv
+
+        return float(betaincinv(a, b, q))
+    except ImportError:  # pragma: no cover - scipy ships with jax here
+        from jax.scipy.special import betainc
+
+        lo, hi = 0.0, 1.0
+        for _ in range(60):
+            mid = 0.5 * (lo + hi)
+            if float(betainc(a, b, mid)) < q:
+                lo = mid
+            else:
+                hi = mid
+        return 0.5 * (lo + hi)
+
+
+def wilson_interval(
+    n_errors: int, n_bits: int, confidence: float = DEFAULT_CONFIDENCE
+) -> Tuple[float, float]:
+    """Two-sided Wilson score interval for a binomial proportion.
+
+    Approximate but well-behaved at the extremes (never collapses to a
+    zero-width interval at k=0 or k=n, unlike the Wald interval)."""
+    if n_bits <= 0:
+        raise ValueError(f"n_bits must be positive, got {n_bits}")
+    if not 0 <= n_errors <= n_bits:
+        raise ValueError(f"n_errors={n_errors} outside [0, {n_bits}]")
+    z = _norm_ppf(1.0 - (1.0 - confidence) / 2.0)
+    n = float(n_bits)
+    p = n_errors / n
+    z2 = z * z
+    denom = 1.0 + z2 / n
+    centre = (p + z2 / (2.0 * n)) / denom
+    half = (z / denom) * math.sqrt(p * (1.0 - p) / n + z2 / (4.0 * n * n))
+    return (max(0.0, centre - half), min(1.0, centre + half))
+
+
+def clopper_pearson(
+    n_errors: int, n_bits: int, confidence: float = DEFAULT_CONFIDENCE
+) -> Tuple[float, float]:
+    """Exact (Clopper-Pearson) two-sided binomial interval via the beta
+    quantile duality: guaranteed >= ``confidence`` coverage at any
+    (k, n) — the interval the regression gate trusts."""
+    if n_bits <= 0:
+        raise ValueError(f"n_bits must be positive, got {n_bits}")
+    if not 0 <= n_errors <= n_bits:
+        raise ValueError(f"n_errors={n_errors} outside [0, {n_bits}]")
+    alpha = 1.0 - confidence
+    k, n = n_errors, n_bits
+    lo = 0.0 if k == 0 else _beta_ppf(alpha / 2.0, k, n - k + 1)
+    hi = 1.0 if k == n else _beta_ppf(1.0 - alpha / 2.0, k + 1, n - k)
+    return (lo, hi)
+
+
+def zero_error_upper(
+    n_bits: int, confidence: float = DEFAULT_CONFIDENCE
+) -> float:
+    """One-sided upper confidence bound on p when 0 errors were observed
+    in ``n_bits`` trials: the exact Clopper-Pearson k=0 face,
+    ``1 - (1-conf)^(1/n)`` (-> -ln(1-conf)/n for large n; 3/n at 95% is
+    the classical "rule of three")."""
+    if n_bits <= 0:
+        raise ValueError(f"n_bits must be positive, got {n_bits}")
+    return 1.0 - (1.0 - confidence) ** (1.0 / n_bits)
+
+
+def rule_of_three(n_bits: int) -> float:
+    """The classical 95% zero-error upper bound, 3/n — the quick mental
+    model for ``zero_error_upper(n, 0.95)``."""
+    if n_bits <= 0:
+        raise ValueError(f"n_bits must be positive, got {n_bits}")
+    return 3.0 / n_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class BerEstimate:
+    """A confidence-bounded BER estimate from raw (errors, bits) counts.
+
+    ``ber`` is k/n when errors were observed; with ZERO errors it is the
+    one-sided upper bound at ``confidence`` (and ``upper_bound`` is set)
+    — a finite sample never reports 0.0 (DESIGN.md §11).  ``ci_lo`` /
+    ``ci_hi`` bound the true BER at ``confidence`` by ``method``.
+    """
+
+    n_bits: int
+    n_errors: int
+    confidence: float
+    ber: float
+    ci_lo: float
+    ci_hi: float
+    method: str
+    upper_bound: bool
+
+    @property
+    def reliable(self) -> bool:
+        """Paper's rule of thumb: >= 100 observed errors."""
+        return self.n_errors >= 100
+
+
+def estimate_ber(
+    n_errors: int,
+    n_bits: int,
+    confidence: float = DEFAULT_CONFIDENCE,
+    method: str = "clopper-pearson",
+) -> BerEstimate:
+    """Counts -> ``BerEstimate`` (the single entry point the farm, the
+    gate and the benches share)."""
+    if method == "clopper-pearson":
+        lo, hi = clopper_pearson(n_errors, n_bits, confidence)
+    elif method == "wilson":
+        lo, hi = wilson_interval(n_errors, n_bits, confidence)
+    else:
+        raise ValueError(
+            f"unknown interval method {method!r}; "
+            "known: clopper-pearson, wilson"
+        )
+    if n_errors == 0:
+        ber = zero_error_upper(n_bits, confidence)
+        upper = True
+    else:
+        ber = n_errors / n_bits
+        upper = False
+    return BerEstimate(
+        n_bits=n_bits,
+        n_errors=n_errors,
+        confidence=confidence,
+        ber=ber,
+        ci_lo=lo,
+        ci_hi=hi,
+        method=method,
+        upper_bound=upper,
+    )
 
 
 @dataclasses.dataclass
@@ -34,6 +238,15 @@ class BerPoint:
     def reliable(self) -> bool:
         """Paper's rule of thumb: BER > 100/n is trustworthy."""
         return self.n_errors >= 100
+
+    def estimate(
+        self, confidence: float = DEFAULT_CONFIDENCE,
+        method: str = "clopper-pearson",
+    ) -> BerEstimate:
+        """Confidence-bounded view of this point (DESIGN.md §11)."""
+        return estimate_ber(
+            self.n_errors, self.n_bits, confidence=confidence, method=method
+        )
 
 
 def uncoded_ber_theory(ebn0_db: float) -> float:

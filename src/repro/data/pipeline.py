@@ -91,11 +91,24 @@ class ChannelStream:
     host_id: int = 0
     code: Optional[str] = None
 
+    def key_at(self, step: int) -> jax.Array:
+        """The PRNG discipline (DESIGN.md §11): batch ``step`` of shard
+        ``host_id`` draws from ``fold_in(fold_in(PRNGKey(seed),
+        host_id), step)``.  ``fold_in`` is a keyed hash, so distinct
+        (host_id, step) pairs give independent streams — per-shard keys
+        are DISJOINT by construction (no arithmetic collisions), and the
+        schedule is a pure function of (seed, host_id, step): restarts
+        resume exactly and any host regenerates any shard."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), self.host_id)
+        return jax.random.fold_in(key, step)
+
+    def shard(self, host_id: int) -> "ChannelStream":
+        """This stream re-keyed for shard ``host_id`` — the per-shard
+        split the sharded BER farm (repro.verify) fans out over."""
+        return dataclasses.replace(self, host_id=host_id)
+
     def batch_at(self, step: int):
-        key = jax.random.PRNGKey(
-            (self.seed * 999_983 + self.host_id) * 999_983 + step
-        )
-        kb, kn = jax.random.split(key)
+        kb, kn = jax.random.split(self.key_at(step))
         bits = jax.random.bernoulli(
             kb, 0.5, (self.n_streams, self.stream_len)
         ).astype(jnp.int32)

@@ -29,9 +29,15 @@ RAGGED requests, mixed codes, mixed latency/throughput SLOs.  The
     one-pass streaming path; cells that fill a provided device mesh ->
     §6 sharded frames; everything else -> dense two-pass batch decode.
     Every path is bit-identical to direct ``ViterbiDecoder`` decode
-    with uniform initial metrics and an argmax traceback
-    (``decode_batch(llrs, initial_state=None, final_state=None)``) —
-    asserted per registry code in ``tests/test_engine.py``.
+    under the code's framing contract: zero-terminated codes pin the
+    INITIAL state to 0 (every frame starts there); frames the client
+    declares ``flushed`` (they carry their zero tail) bucket into
+    exact-length cells and pin the final end too; undeclared streams
+    keep an argmax final end, where the §10 padding lemma holds for
+    ragged lengths.  Tail-biting codes run WAVA.  Asserted per registry
+    code in ``tests/test_engine.py``; the §11 BER farm gate caught the
+    cost of the earlier unpinned (argmax-ends) contract on punctured
+    rates.
   * **jit-fn cache** — decode callables are cached per
     (code, path, F rung, length rung); repeated same-cell batches hit
     the cache (and therefore jax's trace cache) instead of recompiling;
@@ -97,11 +103,20 @@ class DecodeRequest:
     ``llrs`` is (n, beta) shaped stages for unpunctured / tail-biting
     codes, or the 1-D serial kept-LLR stream (Lp,) for punctured codes
     (the §7 front-door convention, per frame).
+
+    ``flushed`` declares the §7 framing: the frame's last stage leaves
+    the encoder at state 0 (it carries its k-1 zero tail).  Flushed
+    frames bucket into their own EXACT-LENGTH cells (like tail-biting
+    — a final pin must land on the true last stage; through pad stages
+    it stops pinning anything) and decode with both trellis ends
+    pinned.  Leave False for streams of unknown framing (length-rung
+    cells, argmax final end, the §10 padding lemma).
     """
 
     llrs: np.ndarray
     code: str = "ccsds-k7"
     slo: str = "throughput"
+    flushed: bool = False
 
 
 @dataclasses.dataclass
@@ -277,35 +292,42 @@ class DecodeEngine:
                 return "sharded"
         return "batch"
 
-    def _decode_fn(self, code: str, path: str, f_cell: int, l_cell: int):
-        """Cached decode callable per (code, path, F rung, length rung)
-        — the jit-cache key of DESIGN.md §10.  One engine-level entry
-        maps onto one traced program shape, so the hit/miss counters
-        are the recompile accounting the tests assert on."""
-        key = (code, path, f_cell, l_cell)
+    def _decode_fn(self, code: str, path: str, f_cell: int, l_cell: int,
+                   flushed: bool = False):
+        """Cached decode callable per (code, path, F rung, length rung,
+        flushed) — the jit-cache key of DESIGN.md §10.  One engine-level
+        entry maps onto one traced program shape, so the hit/miss
+        counters are the recompile accounting the tests assert on."""
+        key = (code, path, f_cell, l_cell, flushed)
         if key in self._fns:
             self._fn_hits += 1
             return self._fns[key]
         self._fn_misses += 1
         dec = self._decoder(code)
+        # zero-terminated frames always START at state 0 (the §7 framing
+        # contract), so whole-frame decodes pin the initial state; the
+        # final end is pinned only for cells of declared-flushed frames
+        # (DecodeRequest.flushed) — for streams of unknown framing it
+        # stays argmax, where the padding lemma (DESIGN.md §10) holds
+        fin = 0 if flushed else None
         if path == "wava":
             fn = lambda llrs: dec.decode_tailbiting(llrs)[0]  # noqa: E731
         elif path == "time_parallel":
             fn = lambda llrs: dec.decode_batch(  # noqa: E731
-                llrs, initial_state=None, final_state=None,
+                llrs, initial_state=0, final_state=fin,
                 time_parallel=True,
             )
         elif path == "stream":
             fn = lambda llrs: dec.decode_stream_chunked(  # noqa: E731
-                llrs, initial_state=None
+                llrs, initial_state=0, final_state=fin
             )
         elif path == "sharded":
             fn = lambda llrs: dec.decode_sharded(  # noqa: E731
-                llrs, mesh=self.mesh, initial_state=None
+                llrs, mesh=self.mesh, initial_state=0, final_state=fin
             )
         else:
             fn = lambda llrs: dec.decode_batch(  # noqa: E731
-                llrs, initial_state=None, final_state=None,
+                llrs, initial_state=0, final_state=fin,
                 time_parallel=False,
             )
         self._fns[key] = fn
@@ -338,14 +360,17 @@ class DecodeEngine:
             )
         return llrs, llrs.shape[0], False, llrs.shape[0]
 
-    def _cell_length(self, req_code, serial: bool, tailbiting: bool,
+    def _cell_length(self, req_code, serial: bool, exact: bool,
                      l_input: int) -> int:
         """Length rung of the cell (DESIGN.md §10 bucketing rules):
-        tail-biting frames keep their exact length (circular trellis —
-        a pad stage would join the wrap-around path); punctured serial
-        lengths round to whole pattern periods so the padded stream
-        depunctures cleanly; everything else rides the ladder as-is."""
-        if tailbiting:
+        exact-length cells — tail-biting frames (circular trellis: a
+        pad stage would join the wrap-around path) and declared-flushed
+        frames (the final pin must land on the TRUE last stage; through
+        pad stages every state reaches the pin for free and it stops
+        pinning anything) — keep l_input; punctured serial lengths
+        round to whole pattern periods so the padded stream depunctures
+        cleanly; everything else rides the ladder as-is."""
+        if exact:
             return l_input
         mult = req_code.puncture.n_kept if serial else 1
         return pick_cell_length(l_input, self.min_cell, mult)
@@ -361,7 +386,14 @@ class DecodeEngine:
         llrs, n_stages, serial, l_input = self._validate(req)
         code = get_code(req.code)
         tb = code.termination == "tailbiting"
-        l_cell = self._cell_length(code, serial, tb, l_input)
+        dec = self._decoder(req.code)
+        # the flushed declaration is honored only where a final pin is
+        # well-defined: zero-terminated code, frame stages on a radix
+        # boundary (a pin cannot land mid-step)
+        flushed = (
+            req.flushed and not tb and n_stages % dec.rho == 0
+        )
+        l_cell = self._cell_length(code, serial, tb or flushed, l_input)
         ticket = Ticket(
             id=next(self._ids),
             code=req.code,
@@ -373,7 +405,10 @@ class DecodeEngine:
             ticket.dropped = True
             self._counts["rejected"] += 1
             return ticket
-        key = (req.code, req.slo, l_cell, "tb" if tb else "open")
+        key = (
+            req.code, req.slo, l_cell,
+            "tb" if tb else ("flushed" if flushed else "open"),
+        )
         self._queues.setdefault(key, collections.deque()).append(
             (ticket, llrs)
         )
@@ -440,7 +475,9 @@ class DecodeEngine:
             dec.puncture.stages_for(l_cell) if serial else l_cell
         )
         path = self._pick_path(code_name, slo, f_cell, n_stages)
-        fn = self._decode_fn(code_name, path, f_cell, l_cell)
+        fn = self._decode_fn(
+            code_name, path, f_cell, l_cell, flushed=(kind == "flushed")
+        )
         bits = np.asarray(fn(jnp.asarray(dense)))
         for i, (ticket, _) in enumerate(entries):
             ticket.bits = bits[i, : ticket.n_out].astype(np.int32)

@@ -109,6 +109,7 @@ _FLAG_SOURCES = {
     "benchmarks.run": "benchmarks/run.py",
     "benchmarks.autotune": "benchmarks/autotune.py",
     "benchmarks.bench_engine": "benchmarks/bench_engine.py",
+    "repro.verify.farm": "src/repro/verify/farm.py",
 }
 _FLAG = re.compile(r"(?<!\S)(--[a-z][a-z-]*)\b")
 

@@ -30,13 +30,15 @@ def _request(code_name, n_bits, slo, seed, ebn0=5.0):
 
 
 def _direct(code_name, llrs):
-    """The engine's decode contract, run directly: uniform initial
-    metrics + argmax traceback (WAVA for tail-biting codes)."""
+    """The engine's decode contract, run directly: zero-terminated
+    frames pin the initial state to 0 (the §7 framing contract — every
+    frame starts there) with an argmax final end, tail-biting codes
+    run WAVA."""
     dec = ViterbiDecoder.from_standard(code_name)
     if dec.termination == "tailbiting":
         return np.asarray(dec.decode_tailbiting(llrs[None])[0])[0]
     return np.asarray(
-        dec.decode_batch(llrs[None], initial_state=None, final_state=None)
+        dec.decode_batch(llrs[None], initial_state=0, final_state=None)
     )[0]
 
 

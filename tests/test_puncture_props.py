@@ -1,0 +1,107 @@
+"""Property-based tests (ISSUE 6 satellite): puncture/depuncture
+roundtrip + erasure-position invariants over EVERY registry pattern,
+and the noiseless encode->decode roundtrip per registry code.  Uses
+``tests/_hypothesis_compat.py`` — with hypothesis absent the @given
+tests skip and the exhaustive pattern sweeps still run."""
+import numpy as np
+import pytest
+
+from repro.codes.puncture import depuncture, puncture
+from repro.codes.registry import REGISTRY, get_code
+
+from _hypothesis_compat import given, settings, strategies as st
+
+PUNCTURED = sorted(n for n, c in REGISTRY.items() if c.puncture is not None)
+ALL_CODES = sorted(REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive pattern invariants (run with or without hypothesis)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", PUNCTURED)
+def test_roundtrip_every_registry_pattern(name):
+    """depuncture(puncture(x)) restores kept positions and zeros the
+    punctured positions — for whole and partial trailing periods."""
+    pat = get_code(name).puncture
+    rng = np.random.default_rng(hash(name) & 0xFFFF)
+    for n in (pat.period, 3 * pat.period, 3 * pat.period + 1,
+              4 * pat.period - 1):
+        x = rng.normal(size=(2, n, pat.beta)).astype(np.float32)
+        kept = np.asarray(puncture(x, pat))
+        assert kept.shape == (2, pat.punctured_len(n))
+        back = np.asarray(depuncture(kept, pat, n=n))
+        assert back.shape == x.shape
+        mask = pat._tiled_mask(n)[None]  # (1, n, beta)
+        np.testing.assert_array_equal(back[:, mask[0]], x[:, mask[0]])
+        assert np.all(back[:, ~mask[0]] == 0.0)
+
+
+@pytest.mark.parametrize("name", PUNCTURED)
+def test_pattern_accounting(name):
+    """kept_indices/punctured_len/stages_for agree with the mask and
+    with each other (the farm's serial-length bookkeeping)."""
+    pat = get_code(name).puncture
+    for periods in (1, 2, 5):
+        n = periods * pat.period
+        lp = pat.punctured_len(n)
+        assert lp == periods * pat.n_kept
+        assert pat.stages_for(lp) == n
+        idx = pat.kept_indices(n)
+        assert idx.shape[0] == lp
+        assert len(np.unique(idx)) == lp  # no double-kept positions
+        assert idx.max() < n * pat.beta
+    assert pat.expansion == pat.period * pat.beta / pat.n_kept
+    assert pat.expansion >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (skip cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+@given(
+    name=st.sampled_from(PUNCTURED),
+    periods=st.integers(min_value=1, max_value=6),
+    extra=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_property(name, periods, extra, seed):
+    pat = get_code(name).puncture
+    n = periods * pat.period + extra
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, pat.beta)).astype(np.float32)
+    back = np.asarray(depuncture(np.asarray(puncture(x, pat)), pat, n=n))
+    mask = pat._tiled_mask(n)
+    np.testing.assert_array_equal(back[mask], x[mask])
+    assert np.all(back[~mask] == 0.0)
+
+
+@given(
+    name=st.sampled_from(ALL_CODES),
+    n_bits=st.integers(min_value=8, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_noiseless_roundtrip_property(name, n_bits, seed):
+    """conv_encode -> (puncture ->) clean BPSK LLRs -> ViterbiDecoder
+    recovers the message bits exactly, for every registry code."""
+    import jax.numpy as jnp
+
+    from repro.codes.simulate import encode_standard, tx_frames
+    from repro.core.decoder import ViterbiDecoder
+
+    code = get_code(name)
+    dec = ViterbiDecoder.from_standard(name)
+    rng = np.random.default_rng(seed)
+    if code.termination == "tailbiting":
+        n_bits += (-n_bits) % dec.rho  # circular trellis: whole steps
+    bits = rng.integers(0, 2, size=(1, n_bits)).astype(np.int32)
+    tx = tx_frames(jnp.asarray(bits), code, rho=dec.rho)
+    coded = encode_standard(tx, code)
+    llrs = (2.0 * coded - 1.0).astype(jnp.float32) * 8.0  # clean channel
+    if code.termination == "zero":
+        out = dec.decode_batch(llrs, initial_state=0, final_state=0)
+    else:
+        out = dec.decode_batch(llrs)
+    np.testing.assert_array_equal(np.asarray(out)[:, :n_bits], bits)

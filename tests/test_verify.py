@@ -1,0 +1,292 @@
+"""The statistical verification subsystem (DESIGN.md §11): interval
+estimators vs tabulated values, regression-gate math on deterministic
+fixtures, farm PRNG discipline, and the sharded farm reproducing
+single-device counts exactly on 8 virtual devices (subprocess: device
+count must be set before jax init)."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.ber import (
+    clopper_pearson,
+    estimate_ber,
+    rule_of_three,
+    wilson_interval,
+    zero_error_upper,
+)
+from repro.data.pipeline import ChannelStream
+from repro.verify import BerFarm, FarmPoint, all_pass, farm_to_json
+from repro.verify.gate import gate_point, run_gate
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Estimator layer vs tabulated values (pinned from scipy.stats exact
+# computations; the implementation must agree with or without scipy)
+# ---------------------------------------------------------------------------
+
+def test_wilson_tabulated():
+    lo, hi = wilson_interval(5, 100, confidence=0.95)
+    assert lo == pytest.approx(0.0215436791, rel=1e-6)
+    assert hi == pytest.approx(0.1117504692, rel=1e-6)
+    lo, hi = wilson_interval(20, 1000, confidence=0.99)
+    assert lo == pytest.approx(0.0113656150, rel=1e-6)
+    assert hi == pytest.approx(0.0349619032, rel=1e-6)
+
+
+def test_clopper_pearson_tabulated():
+    lo, hi = clopper_pearson(5, 100, confidence=0.95)
+    assert lo == pytest.approx(0.0164318791, rel=1e-5)
+    assert hi == pytest.approx(0.1128349111, rel=1e-5)
+    lo, hi = clopper_pearson(20, 1000, confidence=0.99)
+    assert lo == pytest.approx(0.0103983905, rel=1e-5)
+    assert hi == pytest.approx(0.0344137681, rel=1e-5)
+    lo, hi = clopper_pearson(0, 1000, confidence=0.99)
+    assert lo == 0.0
+    assert hi == pytest.approx(0.0052843060, rel=1e-5)
+
+
+def test_interval_shape_invariants():
+    for k, n in [(0, 100), (1, 100), (50, 100), (99, 100), (100, 100)]:
+        for fn in (wilson_interval, clopper_pearson):
+            lo, hi = fn(k, n, confidence=0.99)
+            assert 0.0 <= lo <= hi <= 1.0
+            assert lo <= k / n <= hi
+
+
+def test_zero_error_reports_upper_bound_not_zero():
+    """ISSUE 6 satellite: a zero-error point must never report 0.0."""
+    assert zero_error_upper(1000, 0.99) == pytest.approx(
+        1 - 0.01 ** (1 / 1000), rel=1e-12
+    )
+    # the classic rule of three is the 95% special case, within ~2%
+    assert rule_of_three(1000) == 0.003
+    assert zero_error_upper(1000, 0.95) == pytest.approx(0.003, rel=0.02)
+    est = estimate_ber(0, 1000)
+    assert est.upper_bound
+    assert est.ber > 0.0
+    assert est.ber == pytest.approx(zero_error_upper(1000, est.confidence))
+    assert est.ci_lo == 0.0
+    # nonzero counts report the point estimate, not a bound
+    est = estimate_ber(20, 1000)
+    assert not est.upper_bound
+    assert est.ber == 0.02
+    assert not est.reliable  # < 100 observed errors
+    assert estimate_ber(150, 10_000).reliable
+
+
+# ---------------------------------------------------------------------------
+# Gate math on deterministic fixtures
+# ---------------------------------------------------------------------------
+
+def _pt(path, errors, bits=100_000, code="ccsds-k7", ebn0=3.0, frames=100):
+    return FarmPoint(
+        code=code, path=path, ebn0_db=ebn0, n_frames=frames,
+        frame_bits=bits // frames, n_bits=bits, bit_errors=errors,
+        frame_errors=min(errors, frames),
+    )
+
+
+def test_gate_exact_counts_pass():
+    v = gate_point(_pt("reference", 123), _pt("kernel", 123))
+    assert v.passed and v.reason.startswith("exact")
+
+
+def test_gate_ci_overlap_passes():
+    v = gate_point(_pt("reference", 100), _pt("kernel", 110))
+    assert v.passed and v.reason.startswith("ci-overlap")
+
+
+def test_gate_disjoint_fails():
+    v = gate_point(_pt("reference", 100), _pt("kernel", 300))
+    assert not v.passed and v.reason.startswith("ci-disjoint")
+
+
+def test_gate_cell_mismatch_raises():
+    with pytest.raises(ValueError):
+        gate_point(_pt("reference", 10), _pt("kernel", 10, ebn0=4.0))
+
+
+def test_run_gate_missing_reference_fails():
+    verdicts = run_gate([
+        _pt("reference", 50),
+        _pt("kernel", 50),
+        _pt("kernel", 50, ebn0=5.0),  # no reference at 5.0 dB
+    ])
+    by_cell = {(v.path, v.ebn0_db): v for v in verdicts}
+    assert by_cell[("kernel", 3.0)].passed
+    assert not by_cell[("kernel", 5.0)].passed
+    assert "no 'reference'" in by_cell[("kernel", 5.0)].reason
+    assert not all_pass(verdicts)
+    assert all_pass([v for v in verdicts if v.ebn0_db == 3.0])
+
+
+# ---------------------------------------------------------------------------
+# PRNG discipline (ISSUE 6 satellite)
+# ---------------------------------------------------------------------------
+
+def test_channelstream_same_seed_bit_identical():
+    a = ChannelStream(n_streams=4, stream_len=64, seed=3)
+    b = ChannelStream(n_streams=4, stream_len=64, seed=3)
+    for step in (0, 1, 7):
+        ba, la = a.batch_at(step)
+        bb, lb = b.batch_at(step)
+        assert np.array_equal(np.asarray(ba), np.asarray(bb))
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_channelstream_shard_keys_disjoint():
+    base = ChannelStream(n_streams=4, stream_len=64, seed=3)
+    shards = [base.shard(h) for h in range(4)]
+    assert [s.host_id for s in shards] == [0, 1, 2, 3]
+    # keys disjoint across the whole (host, step) grid
+    keys = {
+        tuple(np.asarray(s.key_at(step)).tolist())
+        for s in shards for step in range(8)
+    }
+    assert len(keys) == 4 * 8
+    # different shards draw different noise from the same step
+    la = np.asarray(shards[0].batch_at(0)[1])
+    lb = np.asarray(shards[1].batch_at(0)[1])
+    assert not np.array_equal(la, lb)
+
+
+def test_farm_batch_keys_shard_invariant():
+    """batch_keys is a pure function of (seed, code, ebn0, batch index):
+    the schedule never depends on how many batches are asked for, which
+    is what makes sharded assignment irrelevant to the counts."""
+    from repro.codes.simulate import batch_keys, point_key
+
+    k8 = np.asarray(batch_keys(0, "ccsds-k7", 3.0, 8))
+    k4 = np.asarray(batch_keys(0, "ccsds-k7", 3.0, 4))
+    assert np.array_equal(k8[:4], k4)
+    assert len({tuple(r) for r in k8.tolist()}) == 8
+    # grid points draw independent processes
+    pks = {
+        tuple(np.asarray(point_key(0, c, e)).tolist())
+        for c in ("ccsds-k7", "lte-tbcc")
+        for e in (2.0, 3.0)
+    }
+    assert len(pks) == 4
+
+
+# ---------------------------------------------------------------------------
+# The farm itself
+# ---------------------------------------------------------------------------
+
+def test_farm_smoke_exact_gate_and_json():
+    farm = BerFarm(
+        codes=["ccsds-k7"], ebn0_dbs=[0.0],
+        paths=("reference", "time_parallel"),
+        frames_per_point=16, batch_frames=8, seed=5,
+    )
+    points = farm.run()
+    assert len(points) == 2
+    ref, tp = points
+    assert ref.path == "reference" and tp.path == "time_parallel"
+    assert ref.n_frames == 16 and ref.n_bits == 16 * ref.frame_bits
+    assert ref.bit_errors > 0  # 0 dB is deep in the waterfall
+    assert ref.frame_errors > 0
+    verdicts = run_gate(points)
+    assert len(verdicts) == 1
+    assert verdicts[0].passed and verdicts[0].reason.startswith("exact")
+    blob = farm_to_json(points, verdicts)
+    assert blob["all_pass"]
+    row = blob["points"][0]
+    for field in ("code", "path", "ebn0_db", "ber", "ci_lo", "ci_hi",
+                  "bit_errors", "n_bits", "fer", "method", "confidence"):
+        assert field in row
+    assert row["ci_lo"] <= row["ber"] <= row["ci_hi"]
+
+
+def test_farm_engine_path_bit_exact_via_flushed():
+    """The §10 engine decodes farm frames (declared flushed) to the
+    same counts as pinned reference decode — the contract the §11 gate
+    enforces, including on a punctured rate."""
+    farm = BerFarm(
+        codes=["wifi-11a-r34"], ebn0_dbs=[3.0],
+        paths=("reference", "engine"),
+        frames_per_point=16, batch_frames=16, seed=2,
+    )
+    points = farm.run()
+    ref, eng = points
+    assert (ref.bit_errors, ref.frame_errors) == (
+        eng.bit_errors, eng.frame_errors
+    )
+    assert ref.bit_errors > 0
+    assert all_pass(run_gate(points))
+
+
+def test_engine_flushed_request_pins_both_ends():
+    """DecodeRequest.flushed buckets into an exact-length cell and
+    decodes with both trellis ends pinned, bit for bit."""
+    import jax.numpy as jnp
+
+    from repro.codes.registry import get_code
+    from repro.codes.simulate import batch_keys, sim_frame_batch
+    from repro.core.decoder import ViterbiDecoder
+    from repro.serve.engine import DecodeEngine, DecodeRequest
+
+    code = get_code("wifi-11a-r34")
+    key = batch_keys(1, "wifi-11a-r34", 3.0, 1)[0]
+    _, llrs = sim_frame_batch(key, code, 8, 250, 3.0)
+    arr = np.asarray(llrs)
+    engine = DecodeEngine(max_batch=8)
+    out = np.stack(
+        engine.decode([
+            DecodeRequest(llrs=arr[i], code="wifi-11a-r34", flushed=True)
+            for i in range(8)
+        ])
+    )
+    dec = ViterbiDecoder.from_standard("wifi-11a-r34")
+    ref = np.asarray(
+        dec.decode_batch(jnp.asarray(arr), initial_state=0, final_state=0)
+    )
+    assert np.array_equal(out, ref[:, : out.shape[1]])
+
+
+_SHARDED_EQ = """
+import jax
+import numpy as np
+from repro.distributed.decoder import frame_mesh
+from repro.verify import BerFarm
+
+assert jax.device_count() == 8, jax.device_count()
+mesh = frame_mesh(8, axis="shards")
+kw = dict(
+    codes=["ccsds-k7", "lte-tbcc"], ebn0_dbs=[2.0],
+    paths=("reference",), frames_per_point=64, batch_frames=8, seed=7,
+)
+single = BerFarm(**kw).run()
+sharded = BerFarm(**kw, mesh=mesh).run()
+assert len(single) == len(sharded) == 2
+for a, b in zip(single, sharded):
+    assert a.n_frames == b.n_frames == 64
+    assert a.bit_errors > 0
+    assert (a.bit_errors, a.frame_errors) == (b.bit_errors, b.frame_errors), (a, b)
+print("OK")
+"""
+
+
+def test_sharded_farm_counts_equal_single_device():
+    """ISSUE 6 acceptance: the sharded farm on 8 virtual devices
+    reproduces the single-device aggregate counts exactly (integer
+    sums over the shard-invariant per-batch key schedule)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_EQ],
+        env=env, capture_output=True, text=True, cwd=REPO, timeout=520,
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "OK" in r.stdout
