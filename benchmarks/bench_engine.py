@@ -105,11 +105,19 @@ def bench(loads=(0.25, 1.0, 16.0), n_requests: int = 600,
         paths = "+".join(
             f"{k}:{v}" for k, v in sorted(s["paths"].items())
         )
+        # §12 registry snapshot columns: jit-cache hit rate over the
+        # replay and the number of distinct (code, path, f, t) cells
+        jc = s["jit_cache"]
+        looks = jc["hits"] + jc["misses"]
+        snap = engine.registry.snapshot()
+        n_cells = len(snap.get("engine_batches_total", {}).get("series", []))
         rows.append((
             f"engine/occupancy@load={load:g}x",
             wall / max(s["batches"], 1) * 1e6,
             f"occupancy={s['occupancy']:.3f};waste={s['padding_waste']:.3f}"
-            f";batches={s['batches']};jit={s['jit_cache']['misses']}"
+            f";batches={s['batches']};jit={jc['misses']}"
+            f";hit_rate={jc['hits'] / looks if looks else 0.0:.3f}"
+            f";cells={n_cells}"
             f";{bits/wall/1e6:.2f}Mb/s-cpu;paths={paths}",
         ))
     return rows

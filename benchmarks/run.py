@@ -46,6 +46,8 @@ _DEPTH = re.compile(r"depth=([0-9]+)(?:->([0-9]+))?")
 _SPEEDUP = re.compile(r"([0-9.]+)x-modeled")
 _OCCUPANCY = re.compile(r"occupancy=([0-9.]+)")
 _WASTE = re.compile(r"waste=([0-9.]+)")
+_HIT_RATE = re.compile(r"hit_rate=([0-9.]+)")
+_CELLS = re.compile(r"cells=([0-9]+)")
 _P50 = re.compile(r"p50=([0-9.]+)ms")
 _P99 = re.compile(r"p99=([0-9.]+)ms")
 # §11 farm-suite columns: Clopper-Pearson CI bounds, raw integer
@@ -96,6 +98,12 @@ def _artifact_rows(rows):
         m = _WASTE.search(row["derived"])
         if m:
             row["padding_waste"] = float(m.group(1))
+        m = _HIT_RATE.search(row["derived"])
+        if m:  # §12 registry snapshot: jit-cache hit rate of the replay
+            row["jit_hit_rate"] = float(m.group(1))
+        m = _CELLS.search(row["derived"])
+        if m:  # distinct (code, path, f, t) cells the registry saw
+            row["cells"] = int(m.group(1))
         m = _P50.search(row["derived"])
         if m:
             row["p50_ms"] = float(m.group(1))
@@ -126,6 +134,36 @@ def _artifact_rows(rows):
     return out
 
 
+def _run_meta() -> dict:
+    """Provenance stamp shared by every BENCH_*.json artifact (schema in
+    docs/BENCHMARKS.md): git SHA, ISO-8601 UTC timestamp, backend,
+    platform and device count — so cross-PR perf trajectories know
+    exactly which commit and host produced each point."""
+    import datetime
+    import platform
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:  # noqa: BLE001 — no git / not a checkout
+        sha = None
+    return {
+        "git_sha": sha,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc
+        ).isoformat(timespec="seconds"),
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "device_count": jax.device_count(),
+    }
+
+
 def _write_artifact(suite: str, rows, fast: bool, out_dir: pathlib.Path):
     import jax
 
@@ -135,6 +173,7 @@ def _write_artifact(suite: str, rows, fast: bool, out_dir: pathlib.Path):
         "suite": suite,
         "fast": fast,
         "backend": jax.default_backend(),
+        "meta": _run_meta(),
         "kernel_configs": {
             name: {
                 "block_frames": kc.block_frames,

@@ -66,6 +66,19 @@ __all__ = ["StreamState", "ViterbiDecoder", "DEFAULT_DECISION_DEPTH"]
 DEFAULT_DECISION_DEPTH = 5120
 
 
+def _count_dispatch(path: str) -> None:
+    """§12 path-selection counter, written to the library-wide default
+    registry (a zero-cost ``NullRegistry`` until observability installs
+    a real one).  Called at host-side dispatch boundaries only — never
+    from inside a jitted function."""
+    from repro.obs.metrics import default_registry
+
+    default_registry().counter(
+        "decoder_dispatch_total",
+        "ViterbiDecoder dispatches by selected decode path",
+    ).inc(1, path=path)
+
+
 @dataclasses.dataclass(frozen=True)
 class StreamState:
     """Carry of the chunked streaming decoder.
@@ -415,6 +428,7 @@ class ViterbiDecoder:
         tp_tile = self._time_parallel_tile(
             F, (n + pad) // self.rho, time_parallel
         )
+        _count_dispatch("time_parallel" if tp_tile is not None else "batch")
         if tp_tile is not None:
             from .timeparallel import decode_time_parallel
 
@@ -466,6 +480,7 @@ class ViterbiDecoder:
         tp_tile = self._time_parallel_tile(
             F, n // tables.rho, time_parallel
         )
+        _count_dispatch("wava")
         return wava_decode(
             llrs,
             tables,
@@ -517,6 +532,7 @@ class ViterbiDecoder:
         cfg = cfg or self.default_tiled_config()
         if cfg.rho != self.rho:
             raise ValueError(f"cfg.rho={cfg.rho} != decoder rho={self.rho}")
+        _count_dispatch("tiled")
         return tiled_decode_stream(
             llrs,
             self.spec,
@@ -612,6 +628,7 @@ class ViterbiDecoder:
         dispatch point under ``decode_chunk`` and the engine's fused
         multi-session step (``decode_chunk_multi``, DESIGN.md §10)."""
         tt = self._one_pass_tile(blocks.shape[0], hist.shape[0])
+        _count_dispatch("chunk_one_pass" if tt else "chunk_two_pass")
         if tt:
             return _chunk_step_fused(
                 hist,
@@ -775,6 +792,7 @@ class ViterbiDecoder:
                 "sharded tail-biting decode not implemented; shard "
                 "frames manually over decode_tailbiting"
             )
+        _count_dispatch("sharded")
         return sharded_decode_frames(
             self.depunctured(llrs),
             self.spec,

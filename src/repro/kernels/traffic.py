@@ -15,8 +15,17 @@ Accounting model (mirrors ``repro.hlocount``'s fusion-aware rules):
     (``known`` shapes, no HLO parse needed, and identical on CPU
     interpret and TPU Mosaic).
   * the XLA halves of each path (the two-pass traceback scan, the flush,
-    the bit repack) are lowered for real and measured with
-    ``hlocount.analyze_hlo`` — loop trip counts included.
+    the bit repack) are charged BACKEND-AWARE (``xla=`` parameter):
+    on TPU they are lowered for real and measured with
+    ``hlocount.analyze_hlo`` (loop trip counts included); on CPU the
+    measured numbers are a proxy of the wrong machine — the CPU lowering
+    materializes bf16 converts and per-trip gather buffers a TPU fusion
+    keeps on-chip — so the default there is ``"static"``: the same
+    boundary-accounting model applied by hand to the known shapes
+    (concat + traceback read the survivor tensor once, bits come out
+    once), identical on every backend.  The ≥5x CI gate therefore
+    asserts on modeled static-interface bytes on CPU instead of a
+    wall-lowering proxy (ISSUE 7 satellite).
 
 Run as a module for the report used by the CI gate and BENCH artifacts:
 
@@ -55,6 +64,19 @@ def _hlo_bytes(fn, *avals) -> float:
     return hlocount.analyze_hlo(text).bytes
 
 
+def _resolve_xla_mode(xla: str) -> str:
+    """``auto`` -> measure the lowered HLO on TPU (the real lowering),
+    static boundary model on CPU (the CPU lowering is a proxy of the
+    wrong machine — module docstring)."""
+    if xla not in ("auto", "hlo", "static"):
+        raise ValueError(f"xla mode must be auto|hlo|static, got {xla!r}")
+    if xla != "auto":
+        return xla
+    from repro.core.backend import on_tpu
+
+    return "hlo" if on_tpu() else "static"
+
+
 @dataclasses.dataclass(frozen=True)
 class StreamTraffic:
     """HBM bytes accessed by one streaming-decode configuration."""
@@ -78,6 +100,36 @@ class StreamTraffic:
         }
 
 
+def _static_flush_bytes(D, F, W_bytes, rho) -> int:
+    """Boundary model of the flush traceback: read the ring once, emit
+    the tail bits once (gather internals fuse on-chip, §8 rules)."""
+    return D * F * W_bytes + F * D * rho * 4
+
+
+def _static_two_pass_post_bytes(T, D, F, W_bytes, rho) -> int:
+    """Boundary model of the two-pass chunk tail (``_chunk_step`` after
+    the kernel forward): concat ring+phi (read both, write full), scan
+    the full survivor tensor back (read), emit all bits, slice out the
+    new ring tail and the chunk's bit window (2x result each, the
+    hlocount slice rule)."""
+    full = (T + D) * F * W_bytes
+    return int(
+        full                      # read phis + hist into the concat
+        + full                    # write the concatenated tensor
+        + full                    # traceback reads it all back
+        + F * (T + D) * rho * 4   # bits over every step, int32
+        + 2 * D * F * W_bytes     # ring-tail slice out
+        + 2 * F * T * rho * 4     # chunk bit-window slice out
+    )
+
+
+def _static_one_pass_post_bytes(T, F, rho) -> int:
+    """Boundary model of the one-pass chunk tail: the (T*rho, F) int8
+    decision plane is transposed/widened to the (F, T*rho) int32
+    contract — read once, write once."""
+    return T * rho * F * 1 + T * rho * F * 4
+
+
 def two_pass_stream_traffic(
     n_stages: int = 512,
     n_frames: int = 1024,
@@ -86,6 +138,7 @@ def two_pass_stream_traffic(
     decision_depth: int = 128,
     pack_survivors: bool = False,
     precision: Optional[AcsPrecision] = None,
+    xla: str = "auto",
 ) -> StreamTraffic:
     """Streaming decode via the two-pass path: the Pallas forward kernel
     materializes phi (T, F, S) to HBM, then the XLA chunk machinery
@@ -108,30 +161,37 @@ def two_pass_stream_traffic(
         "phi_out": _nbytes((T, F, W), phi_dt),
     }
 
-    phis_av = jax.ShapeDtypeStruct((T, F, W), phi_dt)
-    hist_av = jax.ShapeDtypeStruct((D, F, W), phi_dt)
-    lam_av = jax.ShapeDtypeStruct((F, S), jnp.float32)
+    W_bytes = W * np.dtype(phi_dt).itemsize
+    if _resolve_xla_mode(xla) == "static":
+        xb = {
+            "chunk_post": _static_two_pass_post_bytes(T, D, F, W_bytes, rho),
+            "flush": _static_flush_bytes(D, F, W_bytes, rho),
+        }
+    else:
+        phis_av = jax.ShapeDtypeStruct((T, F, W), phi_dt)
+        hist_av = jax.ShapeDtypeStruct((D, F, W), phi_dt)
+        lam_av = jax.ShapeDtypeStruct((F, S), jnp.float32)
 
-    def post(phis, hist, lam2):
-        # the XLA tail of decoder._chunk_step after the kernel forward
-        full = jnp.concatenate([hist, phis], axis=0)
-        fs = jnp.argmax(lam2, axis=-1).astype(jnp.int32)
-        bits = traceback(full, fs, tables)
-        return full[full.shape[0] - hist.shape[0]:], bits[:, : T * rho]
+        def post(phis, hist, lam2):
+            # the XLA tail of decoder._chunk_step after the kernel forward
+            full = jnp.concatenate([hist, phis], axis=0)
+            fs = jnp.argmax(lam2, axis=-1).astype(jnp.int32)
+            bits = traceback(full, fs, tables)
+            return full[full.shape[0] - hist.shape[0]:], bits[:, : T * rho]
 
-    def flush(hist, lam):
-        fs = jnp.argmax(lam, axis=-1).astype(jnp.int32)
-        return traceback(hist, fs, tables)
+        def flush(hist, lam):
+            fs = jnp.argmax(lam, axis=-1).astype(jnp.int32)
+            return traceback(hist, fs, tables)
 
-    xla = {
-        "chunk_post": _hlo_bytes(post, phis_av, hist_av, lam_av),
-        "flush": _hlo_bytes(flush, hist_av, lam_av),
-    }
+        xb = {
+            "chunk_post": _hlo_bytes(post, phis_av, hist_av, lam_av),
+            "flush": _hlo_bytes(flush, hist_av, lam_av),
+        }
     return StreamTraffic(
         label=f"two-pass/pack={pack_survivors}",
         kernel_bytes=sum(kb.values()),
-        xla_bytes=sum(xla.values()),
-        breakdown={**kb, **xla},
+        xla_bytes=sum(xb.values()),
+        breakdown={**kb, **xb},
     )
 
 
@@ -144,6 +204,7 @@ def one_pass_stream_traffic(
     pack_survivors: bool = True,
     time_tile: Optional[int] = None,
     precision: Optional[AcsPrecision] = None,
+    xla: str = "auto",
 ) -> StreamTraffic:
     """Streaming decode via the one-pass time-tiled kernel (DESIGN.md §8):
     phi lives in the VMEM ring; HBM sees the LLR blocks, the decision
@@ -168,27 +229,34 @@ def one_pass_stream_traffic(
         "hist_out": _nbytes((D, F, W), ring_dt),
     }
 
-    bits_av = jax.ShapeDtypeStruct((T * rho, F), jnp.int8)
-    hist_av = jax.ShapeDtypeStruct((D, F, W), ring_dt)
-    lam_av = jax.ShapeDtypeStruct((F, S), jnp.float32)
+    W_bytes = W * np.dtype(ring_dt).itemsize
+    if _resolve_xla_mode(xla) == "static":
+        xb = {
+            "chunk_post": _static_one_pass_post_bytes(T, F, rho),
+            "flush": _static_flush_bytes(D, F, W_bytes, rho),
+        }
+    else:
+        bits_av = jax.ShapeDtypeStruct((T * rho, F), jnp.int8)
+        hist_av = jax.ShapeDtypeStruct((D, F, W), ring_dt)
+        lam_av = jax.ShapeDtypeStruct((F, S), jnp.float32)
 
-    def post(bits):
-        # decoder._chunk_step_fused's repack to the (F, T*rho) contract
-        return bits.T.astype(jnp.int32)
+        def post(bits):
+            # decoder._chunk_step_fused's repack to the (F, T*rho) contract
+            return bits.T.astype(jnp.int32)
 
-    def flush(hist, lam):
-        fs = jnp.argmax(lam, axis=-1).astype(jnp.int32)
-        return traceback(hist, fs, tables)
+        def flush(hist, lam):
+            fs = jnp.argmax(lam, axis=-1).astype(jnp.int32)
+            return traceback(hist, fs, tables)
 
-    xla = {
-        "chunk_post": _hlo_bytes(post, bits_av),
-        "flush": _hlo_bytes(flush, hist_av, lam_av),
-    }
+        xb = {
+            "chunk_post": _hlo_bytes(post, bits_av),
+            "flush": _hlo_bytes(flush, hist_av, lam_av),
+        }
     return StreamTraffic(
         label=f"one-pass/pack={pack_survivors}/tile={tt}",
         kernel_bytes=sum(kb.values()),
-        xla_bytes=sum(xla.values()),
-        breakdown={**kb, **xla},
+        xla_bytes=sum(xb.values()),
+        breakdown={**kb, **xb},
     )
 
 
@@ -197,23 +265,28 @@ def streaming_traffic_report(
     n_stages: int = 512,
     n_frames: int = 1024,
     decision_depth: int = 128,
+    xla: str = "auto",
 ) -> dict:
     """Side-by-side bytes-accessed report at the acceptance shape
     (T=512 stages, F=1024, K=7, rho=2 by default): the two-pass default
     (unpacked phi — what the streaming path shipped before §8), the
     packed two-pass, and the one-pass kernel; ``ratio`` is default
-    two-pass over one-pass."""
+    two-pass over one-pass.  ``xla_mode`` records how the XLA halves
+    were charged (backend-aware, module docstring): ``static`` on CPU —
+    the CI gate compares modeled static-interface bytes, identical on
+    every backend — ``hlo`` (measured lowering) on TPU."""
+    mode = _resolve_xla_mode(xla)
     two = two_pass_stream_traffic(
         n_stages, n_frames, decision_depth=decision_depth,
-        pack_survivors=False,
+        pack_survivors=False, xla=mode,
     )
     two_packed = two_pass_stream_traffic(
         n_stages, n_frames, decision_depth=decision_depth,
-        pack_survivors=True,
+        pack_survivors=True, xla=mode,
     )
     one = one_pass_stream_traffic(
         n_stages, n_frames, decision_depth=decision_depth,
-        pack_survivors=True,
+        pack_survivors=True, xla=mode,
     )
     return {
         "shape": {
@@ -223,6 +296,7 @@ def streaming_traffic_report(
             "spec": "k7-ccsds",
             "rho": 2,
         },
+        "xla_mode": mode,
         "two_pass": two.row(),
         "two_pass_packed": two_packed.row(),
         "one_pass": one.row(),

@@ -157,8 +157,14 @@ def serve_engine(args):
     mixed-code/mixed-SLO workload submitted against a virtual clock,
     polled tick by tick, then gracefully drained — prints decode
     throughput, BER, queue depth / backpressure and the engine's
-    occupancy / padding-waste / jit-cache counters."""
+    occupancy / padding-waste / jit-cache counters.
+
+    With ``--metrics-jsonl PATH`` the run records the §12 observability
+    feed: request-lifecycle spans and a final metrics snapshot go to
+    PATH (render it with ``python -m repro.obs.top --jsonl PATH``), and
+    the drain prints the port-less Prometheus text dump."""
     from repro.codes import encode_standard, get_code, standard_llrs
+    from repro.obs import Observability, set_default_registry
     from repro.serve.step import make_decode_engine
 
     if args.slo == "mixed":
@@ -170,11 +176,17 @@ def serve_engine(args):
         ]
     else:
         tenants = [(args.code, args.slo)]
+    obs = Observability(
+        enabled=args.metrics_jsonl is not None, jsonl=args.metrics_jsonl
+    )
+    prev_reg = set_default_registry(obs.registry)  # decoder path counters
     engine = make_decode_engine(
         use_kernel=args.use_kernel,
         max_batch=args.streams,
         max_wait={"latency": args.max_wait_ms / 4e3,
                   "throughput": args.max_wait_ms / 1e3},
+        registry=obs.registry,
+        recorder=obs.recorder,
     )
     rng = np.random.default_rng(0)
     lens = [args.stream_len // 4, args.stream_len // 3, args.stream_len // 2]
@@ -227,6 +239,14 @@ def serve_engine(args):
         f"dropped={dropped} jit_cache={s['jit_cache']} "
         f"latency(virtual)={lat}"
     )
+    if args.metrics_jsonl is not None:
+        # the §12 port-less drain dump: no metrics port to scrape, so
+        # the Prometheus text goes to stdout and the JSONL gets a final
+        # metrics snapshot line
+        obs.close()
+        print(engine.registry.render_prometheus(), end="")
+        print(f"[engine] spans+metrics -> {args.metrics_jsonl}")
+    set_default_registry(prev_reg)
 
 
 def serve_lm(args):
@@ -300,6 +320,13 @@ def main():
         "--max-wait-ms", type=float, default=10.0,
         help="engine service: throughput-class batch-assembly deadline "
         "(latency class waits a quarter of this)",
+    )
+    ap.add_argument(
+        "--metrics-jsonl", default=None,
+        help="engine service: record the §12 observability feed "
+        "(lifecycle spans + a final metrics snapshot) to this JSONL "
+        "file and print the Prometheus text dump on drain; view with "
+        "python -m repro.obs.top --jsonl PATH",
     )
     args = ap.parse_args()
     if args.service == "viterbi":

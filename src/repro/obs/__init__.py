@@ -1,0 +1,101 @@
+"""Observability subsystem (DESIGN.md §12): metrics registry, span
+tracing, and the device-profile adapter — dependency-free, zero-cost
+when disabled.
+
+Three layers, composable but independently usable:
+
+  * :mod:`repro.obs.metrics` — ``MetricsRegistry`` of counters, gauges
+    and fixed power-of-two-bucket histograms keyed by the serving
+    layer's (code, path, F-rung, T-rung) cell labels, with Prometheus
+    text and plain-dict snapshot exporters.
+  * :mod:`repro.obs.trace` — ``SpanRecorder``/``span(...)`` nested span
+    layer with a JSONL event-log sink (``experiments/obs/`` by
+    convention).
+  * :mod:`repro.obs.profile` — per-dispatch modeled HBM bytes / flops /
+    trip-count depth / roofline terms folded into span attributes.
+
+``Observability`` bundles one registry + one recorder (+ optional JSONL
+sink) for handing to ``DecodeEngine``/``BerFarm``; the module-level
+``default_registry()`` is a ``NullRegistry`` until installed, so
+library-level instrumentation (decoder path counters) is free by
+default.
+
+CLI entry points: ``python -m repro.obs.top`` (terminal snapshot) and
+``python -m repro.obs.smoke`` (the CI gate).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.metrics import (
+    POW2_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRegistry,
+    default_registry,
+    set_default_registry,
+)
+from repro.obs.profile import DispatchProfile, dispatch_profile, measured_depth
+from repro.obs.trace import JsonlSink, NullRecorder, Span, SpanRecorder
+
+__all__ = [
+    "POW2_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NullRegistry",
+    "default_registry",
+    "set_default_registry",
+    "DispatchProfile",
+    "dispatch_profile",
+    "measured_depth",
+    "JsonlSink",
+    "NullRecorder",
+    "Span",
+    "SpanRecorder",
+    "Observability",
+]
+
+
+class Observability:
+    """One registry + one recorder, wired together.
+
+    ``Observability(jsonl=path)`` opens a :class:`JsonlSink` shared by
+    the recorder (span/event lines) and :meth:`dump_metrics` (metrics
+    lines), giving the single-file §12 event log.  With ``enabled=False``
+    the recorder is the shared no-op and no sink is opened — the
+    registry stays real (it is cheap and backs ``stats()``-style
+    accessors), tracing costs nothing.
+    """
+
+    def __init__(self, enabled: bool = True, jsonl: Optional[str] = None,
+                 clock=None, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.sink = JsonlSink(jsonl) if (jsonl and enabled) else None
+        if enabled:
+            kw = {"sink": self.sink}
+            if clock is not None:
+                kw["clock"] = clock
+            self.recorder: SpanRecorder = SpanRecorder(**kw)
+        else:
+            self.recorder = NullRecorder()
+
+    @property
+    def enabled(self) -> bool:
+        return self.recorder.enabled
+
+    def dump_metrics(self) -> None:
+        """Append one ``{"type": "metrics", ...}`` snapshot line to the
+        JSONL sink (no-op without a sink)."""
+        if self.sink is not None:
+            self.sink.write(
+                {"type": "metrics", "data": self.registry.snapshot()}
+            )
+
+    def close(self) -> None:
+        self.dump_metrics()
+        if self.sink is not None:
+            self.sink.close()

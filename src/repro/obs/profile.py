@@ -1,0 +1,223 @@
+"""Device-profile adapter: modeled HBM traffic, flops, trip-count depth
+and roofline terms per engine dispatch (DESIGN.md §12).
+
+This is the fold of three accounting layers that already exist into ONE
+per-dispatch record the span layer can attach:
+
+  * **static interface bytes** — the ``kernels/traffic.py`` rules: a
+    Pallas call's HBM traffic IS its BlockSpec interface; XLA stages are
+    charged by the same materialize-at-the-boundary model.  For the §8
+    one-pass streaming path the numbers come straight from
+    ``traffic.one_pass_stream_traffic(xla="static")``; the other routes
+    use the same shape arithmetic inline (phi round-trip for two-pass
+    batch, transfer-matrix formation + scan levels for §9, two
+    circulations for WAVA).
+  * **trip-count depth** — the ``hlocount`` sequential-dependency model
+    (DESIGN.md §9): forward + traceback loops for sequential paths,
+    ``3*tile + log2(tiles)`` for the time-parallel scan.  The modeled
+    depth mirrors what ``hlocount.total_trip_count`` reports on the
+    lowered HLO (asserted in tests on a small shape).
+  * **roofline terms** — ``roofline.TPU_V5E`` by default:
+    ``t_compute = flops/peak``, ``t_memory = bytes/bw``, the bottleneck
+    label, and arithmetic intensity; ``achieved(wall)`` turns a measured
+    dispatch wall time into achieved-vs-peak fractions (honest caveat:
+    on the CPU dev host the "achieved" fraction prices CPU wall against
+    the v5e roof — a cross-PR trend signal, not a utilization claim).
+
+Everything is pure shape arithmetic; profiles are cached per
+(spec, path, cell) so the per-dispatch cost when tracing is enabled is
+one dict lookup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.trellis import CodeSpec, build_acs_tables
+from repro.roofline import HW, TPU_V5E
+
+__all__ = ["DispatchProfile", "dispatch_profile", "measured_depth"]
+
+# decode routes the adapter can model — the engine's routing-table
+# labels (DESIGN.md §10) plus the session (chunk-multi) dispatch
+_PATHS = (
+    "batch", "time_parallel", "stream", "wava", "sharded", "session"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchProfile:
+    """Modeled cost of one dispatched (code, path, F, T) cell."""
+
+    path: str
+    f_cell: int
+    n_stages: int
+    hbm_bytes: int        # static interface bytes (traffic.py rules)
+    flops: float          # fused-ACS matmul model (2*T'*F*S*(B+S) core)
+    depth: int            # modeled sequential trip count (hlocount rules)
+    hw_name: str = TPU_V5E.name
+    peak_flops: float = TPU_V5E.peak_flops
+    hbm_bw: float = TPU_V5E.hbm_bw
+
+    @property
+    def intensity(self) -> float:
+        """Arithmetic intensity, flops per HBM byte."""
+        return self.flops / self.hbm_bytes if self.hbm_bytes else 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def bottleneck(self) -> str:
+        return "compute" if self.t_compute >= self.t_memory else "memory"
+
+    def span_attrs(self) -> dict:
+        """The per-dispatch attributes the engine attaches to its
+        dispatch spans (flat, JSON-able)."""
+        return {
+            "hbm_bytes_modeled": int(self.hbm_bytes),
+            "flops_modeled": float(self.flops),
+            "intensity": round(self.intensity, 4),
+            "depth_modeled": int(self.depth),
+            "t_memory_us": round(self.t_memory * 1e6, 3),
+            "t_compute_us": round(self.t_compute * 1e6, 3),
+            "bottleneck": self.bottleneck,
+            "hw": self.hw_name,
+        }
+
+    def achieved(self, wall_s: float, n_devices: int = 1) -> dict:
+        """Achieved-vs-peak at a measured dispatch wall time: the
+        roofline.py fold (module docstring caveat about CPU hosts)."""
+        if wall_s <= 0:
+            return {}
+        dev = max(n_devices, 1)
+        bw = self.hbm_bytes / wall_s / dev
+        fl = self.flops / wall_s / dev
+        return {
+            "wall_s": wall_s,
+            "achieved_hbm_Bps": bw,
+            "achieved_hbm_frac": bw / self.hbm_bw,
+            "achieved_flops": fl,
+            "achieved_flops_frac": fl / self.peak_flops,
+        }
+
+
+def _two_pass_batch_bytes(T, F, S, R, B, W_bytes, mm) -> int:
+    """Dense two-pass decode: forward (blocks in, phi out, lam carry) +
+    traceback (phi read back, bits out) — the §8 phi round-trip."""
+    phi = T * F * W_bytes
+    return int(
+        T * F * B * mm          # branch-metric blocks in
+        + (B + S) * S * R * mm  # fused weight matrix
+        + 2 * F * S * 4         # lam in/out
+        + 2 * phi               # phi: write forward, read traceback
+        + F * T * 2 * 4         # bits out (rho=2 stages, int32)
+    )
+
+
+def _profile_key(dec, path: str, f_cell: int, n_stages: int):
+    return (
+        dec.spec, dec.rho, path, int(f_cell), int(n_stages),
+        dec.decision_depth, bool(dec.ring_packed),
+        np.dtype(dec.precision.matmul_dtype).itemsize,
+        dec.transfer_tile,
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def _profile_cached(
+    spec: CodeSpec, rho: int, path: str, f_cell: int, n_stages: int,
+    decision_depth: int, packed: bool, mm: int,
+    transfer_tile: Optional[int], hw: HW,
+) -> DispatchProfile:
+    from repro.core.kernel_geometry import pick_transfer_tile
+    from repro.kernels.viterbi_acs import ring_dtype, ring_words
+
+    tables = build_acs_tables(spec, rho)
+    S, R, B = tables.n_states, tables.n_slots, tables.llr_block
+    T = max(-(-n_stages // rho), 1)
+    F = max(int(f_cell), 1)
+    D = max(decision_depth // rho, 1)
+    W_bytes = ring_words(S, packed) * np.dtype(ring_dtype(packed)).itemsize
+
+    # fused-ACS core: one (B+S)-contraction matmul per step per frame
+    acs_flops = 2.0 * T * F * S * (B + S)
+
+    if path in ("stream", "session"):
+        # the §8 one-pass accounting, straight from traffic.py's static
+        # interface model (survivors never leave VMEM)
+        from repro.kernels.traffic import one_pass_stream_traffic
+
+        tr = one_pass_stream_traffic(
+            n_stages=max(T * rho, rho), n_frames=F, spec=spec, rho=rho,
+            decision_depth=max(D * rho, rho), xla="static",
+        )
+        bytes_ = int(tr.total)
+        depth = T + D  # forward tiles + flush traceback
+        flops = acs_flops
+    elif path == "time_parallel":
+        tile = pick_transfer_tile(T, transfer_tile)
+        n_tiles = max(-(-T // tile), 1)
+        levels = max(int(math.ceil(math.log2(n_tiles))), 0) if (
+            n_tiles > 1
+        ) else 0
+        tm = n_tiles * S * S * 4  # one f32 transfer matrix per tile
+        bytes_ = int(
+            T * F * B * mm                  # formation reads the blocks
+            + (B + S) * S * R * mm
+            + tm                            # formation writes matrices
+            + 2 * tm * max(levels, 1)       # scan levels read+write
+            + _two_pass_batch_bytes(T, F, S, R, B, W_bytes, mm)  # recovery
+        )
+        # formation folds the S-entry-state axis into the batch (§9)
+        flops = acs_flops * (1.0 + S / max(F, 1)) + (
+            2.0 * (S ** 3) * n_tiles * max(levels, 1)
+        )
+        depth = 3 * tile + levels
+    elif path == "wava":
+        # two wrap-around circulations of the dense two-pass decode (§7)
+        bytes_ = 2 * _two_pass_batch_bytes(T, F, S, R, B, W_bytes, mm)
+        flops = 2.0 * acs_flops
+        depth = 2 * 2 * T
+    else:  # batch / sharded (per-shard program == the dense batch)
+        bytes_ = _two_pass_batch_bytes(T, F, S, R, B, W_bytes, mm)
+        flops = acs_flops
+        depth = 2 * T  # forward scan + traceback scan
+    return DispatchProfile(
+        path=path, f_cell=F, n_stages=int(n_stages),
+        hbm_bytes=int(bytes_), flops=float(flops), depth=int(depth),
+        hw_name=hw.name, peak_flops=hw.peak_flops, hbm_bw=hw.hbm_bw,
+    )
+
+
+def dispatch_profile(dec, path: str, f_cell: int, n_stages: int,
+                     hw: HW = TPU_V5E) -> DispatchProfile:
+    """Profile of dispatching ``f_cell`` frames x ``n_stages`` stages of
+    ``dec``'s code down the named route.  ``dec`` is a
+    ``core.decoder.ViterbiDecoder``; unknown paths fall back to the
+    dense-batch model (the engine's default route)."""
+    if path not in _PATHS:
+        path = "batch"
+    return _profile_cached(*_profile_key(dec, path, f_cell, n_stages), hw)
+
+
+def measured_depth(fn, *avals) -> int:
+    """The measured counterpart of ``DispatchProfile.depth``: lower
+    ``fn`` at the given abstract values and count loop trips with
+    ``hlocount.total_trip_count`` (tests compare model vs measurement
+    on small shapes; too slow for per-dispatch use)."""
+    import jax
+
+    from repro import hlocount
+
+    text = jax.jit(fn).lower(*avals).compile().as_text()
+    return hlocount.total_trip_count(text)

@@ -74,6 +74,8 @@ from repro.core.kernel_geometry import (
     pick_cell_length,
     time_parallel_plan,
 )
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NullRecorder, SpanRecorder
 
 __all__ = [
     "SLO_CLASSES",
@@ -184,6 +186,14 @@ class DecodeEngine:
                        for the §9 latency-route eligibility (tests /
                        capacity planning; None = probe the backend).
     min_cell         : bottom rung of the length ladder.
+    registry         : ``obs.MetricsRegistry`` backing all counters and
+                       ``stats()`` (DESIGN.md §12).  None builds a
+                       private real registry — the registry is always
+                       real because it IS the stats() store.
+    recorder         : ``obs.SpanRecorder`` for the request-lifecycle
+                       spans (enqueue -> assemble -> jit lookup ->
+                       dispatch -> device wait -> emit).  None installs
+                       the zero-cost ``NullRecorder``.
     """
 
     def __init__(
@@ -198,6 +208,8 @@ class DecodeEngine:
         mesh=None,
         underfill_rows: Optional[int] = None,
         min_cell: int = ENGINE_MIN_CELL,
+        registry: Optional[MetricsRegistry] = None,
+        recorder: Optional[SpanRecorder] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -214,8 +226,6 @@ class DecodeEngine:
         self._decoders: Dict[str, ViterbiDecoder] = {}
         self._queues: Dict[Tuple, collections.deque] = {}
         self._fns: Dict[Tuple, object] = {}
-        self._fn_hits = 0
-        self._fn_misses = 0
         self._sessions: "collections.OrderedDict[str, _Session]" = (
             collections.OrderedDict()
         )
@@ -224,19 +234,63 @@ class DecodeEngine:
         )
         self._ids = itertools.count()
         self._sids = itertools.count()
-        # histories are bounded (DESIGN.md §10): a long-running engine
-        # must not grow state per request — percentiles cover the most
-        # recent window, batch_log the most recent batches, and parked
-        # eviction tails expire oldest-first if never read
-        self._sojourns: Dict[str, collections.deque] = {
-            s: collections.deque(maxlen=4096) for s in SLO_CLASSES
-        }
+        # histories are bounded (DESIGN.md §10, §12): a long-running
+        # engine must not grow state per request — the sojourn
+        # histograms keep a 4096-observation exact window, batch_log
+        # the most recent batches, and parked eviction tails expire
+        # oldest-first if never read
         self.batch_log: "collections.deque[dict]" = collections.deque(
             maxlen=1024
         )
         self._done_buffer: List[Ticket] = []  # completed out of band
-        self._counts = collections.Counter()
-        self._elems = collections.Counter()  # real/padded LLR elements
+        # §12 accounting: every counter lives in the registry (stats()
+        # reads it back), spans go through the recorder (no-op default)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.recorder = recorder if recorder is not None else NullRecorder()
+        r = self.registry
+        self._m_requests = r.counter(
+            "engine_requests_total",
+            "requests by lifecycle event (submitted/completed/rejected)",
+        )
+        self._m_batches = r.counter(
+            "engine_batches_total",
+            "dispatched batches per (code, path, f, t) cell",
+        )
+        self._m_frames = r.counter(
+            "engine_frames_total",
+            "frames per dispatched cell, kind=real|pad",
+        )
+        self._m_elems = r.counter(
+            "engine_llr_elems_total",
+            "LLR elements moved per batch, kind=real|pad",
+        )
+        self._m_sessions = r.counter(
+            "engine_sessions_total",
+            "session lifecycle events (opened/closed/evicted; closed "
+            "includes forced closes by eviction)",
+        )
+        self._m_jit = r.counter(
+            "engine_jit_cache_total", "jit-fn cache lookups, event=hit|miss"
+        )
+        self._m_queue = r.gauge(
+            "engine_queue_depth", "requests + session chunks waiting"
+        )
+        self._m_open_sessions = r.gauge(
+            "engine_open_sessions", "sessions currently in the LRU table"
+        )
+        self._m_jit_entries = r.gauge(
+            "engine_jit_cache_entries", "cached decode callables"
+        )
+        self._m_sojourn = r.histogram(
+            "engine_sojourn_seconds",
+            "submit -> complete sojourn per SLO class (engine clock)",
+            window=4096,
+        )
+        self._m_dispatch = r.histogram(
+            "engine_dispatch_seconds",
+            "dispatch + device wait wall time per (code, path, f, t) "
+            "cell (recorded only while tracing is enabled)",
+        )
 
     # -- decoders / jit-fn cache ------------------------------------------
 
@@ -300,9 +354,9 @@ class DecodeEngine:
         counters are the recompile accounting the tests assert on."""
         key = (code, path, f_cell, l_cell, flushed)
         if key in self._fns:
-            self._fn_hits += 1
+            self._m_jit.inc(1, event="hit")
             return self._fns[key]
-        self._fn_misses += 1
+        self._m_jit.inc(1, event="miss")
         dec = self._decoder(code)
         # zero-terminated frames always START at state 0 (the §7 framing
         # contract), so whole-frame decodes pin the initial state; the
@@ -331,6 +385,7 @@ class DecodeEngine:
                 time_parallel=False,
             )
         self._fns[key] = fn
+        self._m_jit_entries.set(len(self._fns))
         return fn
 
     # -- request intake ----------------------------------------------------
@@ -403,7 +458,7 @@ class DecodeEngine:
         )
         if self.queue_depth() >= self.max_pending:
             ticket.dropped = True
-            self._counts["rejected"] += 1
+            self._m_requests.inc(1, event="rejected", slo=req.slo)
             return ticket
         key = (
             req.code, req.slo, l_cell,
@@ -412,7 +467,11 @@ class DecodeEngine:
         self._queues.setdefault(key, collections.deque()).append(
             (ticket, llrs)
         )
-        self._counts["submitted"] += 1
+        self._m_requests.inc(1, event="submitted", slo=req.slo)
+        self.recorder.event(
+            "engine.enqueue", ticket=ticket.id, code=req.code,
+            slo=req.slo, t_cell=l_cell, n_stages=n_stages, now=now,
+        )
         return ticket
 
     def queue_depth(self) -> int:
@@ -458,41 +517,70 @@ class DecodeEngine:
 
     def _run_batch(self, key, q, now: float) -> List[Ticket]:
         code_name, slo, l_cell, kind = key
-        k = min(len(q), self.max_batch)
-        entries = [q.popleft() for _ in range(k)]
-        f_cell = pick_cell_frames(k, self.max_batch)
-        dec = self._decoder(code_name)
-        serial = dec.puncture is not None
-        shape = (f_cell, l_cell) if serial else (
-            f_cell, l_cell, dec.spec.beta
-        )
-        dense = np.zeros(shape, np.float32)
-        real_elems = 0
-        for i, (_, llrs) in enumerate(entries):
-            dense[i, : llrs.shape[0]] = llrs
-            real_elems += llrs.size
-        n_stages = (
-            dec.puncture.stages_for(l_cell) if serial else l_cell
-        )
-        path = self._pick_path(code_name, slo, f_cell, n_stages)
-        fn = self._decode_fn(
-            code_name, path, f_cell, l_cell, flushed=(kind == "flushed")
-        )
-        bits = np.asarray(fn(jnp.asarray(dense)))
-        for i, (ticket, _) in enumerate(entries):
-            ticket.bits = bits[i, : ticket.n_out].astype(np.int32)
-            ticket.done = True
-            ticket.completed = now
-            ticket.cell = (code_name, slo, l_cell, f_cell)
-            ticket.path = path
-            self._sojourns[slo].append(now - ticket.submitted)
-        self._counts["completed"] += k
-        self._counts["batches"] += 1
-        self._counts[f"path/{path}"] += 1
-        self._counts["frames_real"] += k
-        self._counts["frames_cell"] += f_cell
-        self._elems["real"] += real_elems
-        self._elems["cell"] += int(np.prod(shape))
+        rec = self.recorder
+        with rec.span(
+            "engine.batch", code=code_name, slo=slo, t=l_cell, kind=kind,
+            now=now,
+        ) as bsp:
+            k = min(len(q), self.max_batch)
+            entries = [q.popleft() for _ in range(k)]
+            f_cell = pick_cell_frames(k, self.max_batch)
+            dec = self._decoder(code_name)
+            serial = dec.puncture is not None
+            with rec.span("engine.assemble", n_real=k, f=f_cell):
+                shape = (f_cell, l_cell) if serial else (
+                    f_cell, l_cell, dec.spec.beta
+                )
+                dense = np.zeros(shape, np.float32)
+                real_elems = 0
+                for i, (_, llrs) in enumerate(entries):
+                    dense[i, : llrs.shape[0]] = llrs
+                    real_elems += llrs.size
+            n_stages = (
+                dec.puncture.stages_for(l_cell) if serial else l_cell
+            )
+            path = self._pick_path(code_name, slo, f_cell, n_stages)
+            bsp.set(path=path, f=f_cell, n_real=k)
+            with rec.span("engine.jit_lookup", path=path):
+                fn = self._decode_fn(
+                    code_name, path, f_cell, l_cell,
+                    flushed=(kind == "flushed"),
+                )
+            with rec.span(
+                "engine.dispatch", code=code_name, path=path,
+                f=f_cell, t=l_cell,
+            ) as dsp:
+                prof = None
+                if rec.enabled:
+                    from repro.obs.profile import dispatch_profile
+
+                    prof = dispatch_profile(dec, path, f_cell, n_stages)
+                    dsp.set(**prof.span_attrs())
+                out = fn(jnp.asarray(dense))
+                with rec.span("engine.device_wait"):
+                    bits = np.asarray(out)
+                if prof is not None:
+                    wall = rec.clock() - dsp.t0
+                    dsp.set(**prof.achieved(wall))
+                    self._m_dispatch.observe(
+                        wall, code=code_name, path=path, f=f_cell, t=l_cell
+                    )
+            with rec.span("engine.emit", n=k):
+                for i, (ticket, _) in enumerate(entries):
+                    ticket.bits = bits[i, : ticket.n_out].astype(np.int32)
+                    ticket.done = True
+                    ticket.completed = now
+                    ticket.cell = (code_name, slo, l_cell, f_cell)
+                    ticket.path = path
+                    self._m_sojourn.observe(now - ticket.submitted, slo=slo)
+        cl = dict(code=code_name, path=path, f=f_cell, t=l_cell)
+        self._m_requests.inc(k, event="completed", slo=slo)
+        self._m_batches.inc(1, slo=slo, **cl)
+        self._m_frames.inc(k, kind="real", **cl)
+        self._m_frames.inc(f_cell - k, kind="pad", **cl)
+        cell_elems = int(np.prod(shape))
+        self._m_elems.inc(real_elems, kind="real")
+        self._m_elems.inc(cell_elems - real_elems, kind="pad")
         self.batch_log.append(
             dict(
                 cell=(code_name, slo, l_cell),
@@ -530,7 +618,8 @@ class DecodeEngine:
             pending=collections.deque(),
             last_used=now,
         )
-        self._counts["sessions_opened"] += 1
+        self._m_sessions.inc(1, event="opened")
+        self._m_open_sessions.set(len(self._sessions))
         return sid
 
     def _shape_chunk(self, dec: ViterbiDecoder, llrs: np.ndarray):
@@ -583,12 +672,12 @@ class DecodeEngine:
         )
         if self.queue_depth() >= self.max_pending:
             ticket.dropped = True
-            self._counts["rejected"] += 1
+            self._m_requests.inc(1, event="rejected", slo="throughput")
             return ticket
         sess.pending.append((ticket, shaped))
         self._sessions.move_to_end(sid)
         sess.last_used = now
-        self._counts["submitted"] += 1
+        self._m_requests.inc(1, event="submitted", slo="throughput")
         return ticket
 
     def _run_sessions(self, now: float) -> List[Ticket]:
@@ -620,46 +709,75 @@ class DecodeEngine:
     ) -> List[Ticket]:
         """One fused dispatch of <= max_batch sessions' head chunks."""
         dec = self._decoder(code_name)
-        tickets, chunks, states = [], [], []
-        for sess in sessions:
-            ticket, shaped = sess.pending.popleft()
-            tickets.append(ticket)
-            chunks.append(shaped)
-            states.append(sess.state)
-        k = len(sessions)
-        f_cell = pick_cell_frames(k, self.max_batch)
-        if f_cell > k:  # pad with throwaway zero states
-            states.append(dec.init_stream_state(f_cell - k))
-            chunks.append(
-                np.zeros((f_cell - k, c, dec.spec.beta), np.float32)
-            )
-        key = (code_name, "session", f_cell, c)
-        if key in self._fns:
-            self._fn_hits += 1
-        else:
-            self._fn_misses += 1
-            self._fns[key] = dec.decode_chunk_multi
-        new_states, outs = self._fns[key](states, chunks)
-        done: List[Ticket] = []
-        for sess, ticket, state, out in zip(
-            sessions, tickets, new_states, outs
+        rec = self.recorder
+        with rec.span(
+            "engine.batch", code=code_name, slo="throughput", t=c,
+            kind="session", path="session", now=now,
         ):
-            sess.state = state
-            sess.consumed_steps += c
-            ticket.bits = np.asarray(out[0]).astype(np.int32)
-            ticket.n_out = ticket.bits.shape[0]
-            ticket.done = True
-            ticket.completed = now
-            ticket.path = "session"
-            done.append(ticket)
-            self._sojourns["throughput"].append(now - ticket.submitted)
-        self._counts["completed"] += k
-        self._counts["batches"] += 1
-        self._counts["path/session"] += 1
-        self._counts["frames_real"] += k
-        self._counts["frames_cell"] += f_cell
-        self._elems["real"] += k * c * dec.spec.beta
-        self._elems["cell"] += f_cell * c * dec.spec.beta
+            tickets, chunks, states = [], [], []
+            k = len(sessions)
+            f_cell = pick_cell_frames(k, self.max_batch)
+            with rec.span("engine.assemble", n_real=k, f=f_cell):
+                for sess in sessions:
+                    ticket, shaped = sess.pending.popleft()
+                    tickets.append(ticket)
+                    chunks.append(shaped)
+                    states.append(sess.state)
+                if f_cell > k:  # pad with throwaway zero states
+                    states.append(dec.init_stream_state(f_cell - k))
+                    chunks.append(
+                        np.zeros((f_cell - k, c, dec.spec.beta), np.float32)
+                    )
+            key = (code_name, "session", f_cell, c)
+            with rec.span("engine.jit_lookup", path="session"):
+                if key in self._fns:
+                    self._m_jit.inc(1, event="hit")
+                else:
+                    self._m_jit.inc(1, event="miss")
+                    self._fns[key] = dec.decode_chunk_multi
+                    self._m_jit_entries.set(len(self._fns))
+            with rec.span(
+                "engine.dispatch", code=code_name, path="session",
+                f=f_cell, t=c,
+            ) as dsp:
+                prof = None
+                if rec.enabled:
+                    from repro.obs.profile import dispatch_profile
+
+                    prof = dispatch_profile(dec, "session", f_cell, c)
+                    dsp.set(**prof.span_attrs())
+                new_states, outs = self._fns[key](states, chunks)
+                with rec.span("engine.device_wait"):
+                    outs = [np.asarray(o) for o in outs]
+                if prof is not None:
+                    wall = rec.clock() - dsp.t0
+                    dsp.set(**prof.achieved(wall))
+                    self._m_dispatch.observe(
+                        wall, code=code_name, path="session", f=f_cell, t=c
+                    )
+            done: List[Ticket] = []
+            with rec.span("engine.emit", n=k):
+                for sess, ticket, state, out in zip(
+                    sessions, tickets, new_states, outs
+                ):
+                    sess.state = state
+                    sess.consumed_steps += c
+                    ticket.bits = np.asarray(out[0]).astype(np.int32)
+                    ticket.n_out = ticket.bits.shape[0]
+                    ticket.done = True
+                    ticket.completed = now
+                    ticket.path = "session"
+                    done.append(ticket)
+                    self._m_sojourn.observe(
+                        now - ticket.submitted, slo="throughput"
+                    )
+        cl = dict(code=code_name, path="session", f=f_cell, t=c)
+        self._m_requests.inc(k, event="completed", slo="throughput")
+        self._m_batches.inc(1, slo="throughput", **cl)
+        self._m_frames.inc(k, kind="real", **cl)
+        self._m_frames.inc(f_cell - k, kind="pad", **cl)
+        self._m_elems.inc(k * c * dec.spec.beta, kind="real")
+        self._m_elems.inc((f_cell - k) * c * dec.spec.beta, kind="pad")
         self.batch_log.append(
             dict(
                 cell=(code_name, "session", c),
@@ -691,7 +809,8 @@ class DecodeEngine:
         dec = self._decoder(sess.code)
         tail = np.asarray(dec.flush_stream(sess.state))[0].astype(np.int32)
         del self._sessions[sid]
-        self._counts["sessions_closed"] += 1
+        self._m_sessions.inc(1, event="closed")
+        self._m_open_sessions.set(len(self._sessions))
         return tail
 
     def _evict_lru(self, now: float):
@@ -703,8 +822,9 @@ class DecodeEngine:
         self._evicted[sid] = self.close_session(sid, now)
         while len(self._evicted) > 64:  # bounded: unread tails expire
             self._evicted.popitem(last=False)
-        self._counts["sessions_evicted"] += 1
-        self._counts["sessions_closed"] -= 1  # counted as eviction
+        # ``closed`` (monotonic, Prometheus semantics) already counted
+        # the forced close above; ``evicted`` marks it as such
+        self._m_sessions.inc(1, event="evicted")
 
     def evicted_tail(self, sid: str) -> np.ndarray:
         """Tail bits of an evicted session (kept until read once)."""
@@ -724,42 +844,52 @@ class DecodeEngine:
         return [t.bits for t in tickets]
 
     def stats(self) -> dict:
-        """Operator counters (schema documented in DESIGN.md §10)."""
-        cell_frames = self._counts["frames_cell"]
-        cell_elems = self._elems["cell"]
+        """Operator counters (schema documented in DESIGN.md §10).
+
+        Since §12 every value is read back from ``self.registry`` —
+        same keys, same numbers (the sojourn histograms keep a
+        4096-observation exact window, so p50/p99 match the pre-§12
+        deque percentiles exactly)."""
+        real_frames = self._m_frames.total(kind="real")
+        cell_frames = real_frames + self._m_frames.total(kind="pad")
+        real_elems = self._m_elems.total(kind="real")
+        cell_elems = real_elems + self._m_elems.total(kind="pad")
         lat = {}
-        for slo, xs in self._sojourns.items():
-            if xs:
-                arr = np.asarray(xs)
+        for slo in SLO_CLASSES:
+            n = self._m_sojourn.count(slo=slo)
+            if n:
                 lat[slo] = {
-                    "n": int(arr.size),
-                    "p50": float(np.percentile(arr, 50)),
-                    "p99": float(np.percentile(arr, 99)),
+                    "n": int(min(n, 4096)),  # the exact-window bound
+                    "p50": float(self._m_sojourn.quantile(0.50, slo=slo)),
+                    "p99": float(self._m_sojourn.quantile(0.99, slo=slo)),
                 }
+        paths: Dict[str, int] = {}
+        for lbl, v in self._m_batches.series():
+            p = lbl.get("path", "?")
+            paths[p] = paths.get(p, 0) + int(v)
+        qd = self.queue_depth()
+        self._m_queue.set(qd)
+        self._m_open_sessions.set(len(self._sessions))
         return {
-            "submitted": self._counts["submitted"],
-            "completed": self._counts["completed"],
-            "rejected": self._counts["rejected"],
-            "batches": self._counts["batches"],
-            "queue_depth": self.queue_depth(),
+            "submitted": int(self._m_requests.total(event="submitted")),
+            "completed": int(self._m_requests.total(event="completed")),
+            "rejected": int(self._m_requests.total(event="rejected")),
+            "batches": int(self._m_batches.total()),
+            "queue_depth": qd,
             "sessions": len(self._sessions),
-            "sessions_evicted": self._counts["sessions_evicted"],
-            "paths": {
-                k.split("/", 1)[1]: v
-                for k, v in self._counts.items()
-                if k.startswith("path/")
-            },
+            "sessions_evicted": int(
+                self._m_sessions.value(event="evicted")
+            ),
+            "paths": paths,
             "occupancy": (
-                self._counts["frames_real"] / cell_frames
-                if cell_frames else 0.0
+                real_frames / cell_frames if cell_frames else 0.0
             ),
             "padding_waste": (
-                1.0 - self._elems["real"] / cell_elems
-                if cell_elems else 0.0
+                1.0 - real_elems / cell_elems if cell_elems else 0.0
             ),
             "jit_cache": {
-                "hits": self._fn_hits,
-                "misses": self._fn_misses,
+                "hits": int(self._m_jit.value(event="hit")),
+                "misses": int(self._m_jit.value(event="miss")),
                 "entries": len(self._fns),
             },
             "latency": lat,

@@ -132,6 +132,12 @@ class BerFarm:
                        shard the batch-key axis across it.
     scan_chunk       : max batches per device scan; whole-point counts
                        accumulate across chunks in Python ints.
+    recorder         : optional ``obs.SpanRecorder`` — each grid point
+                       runs inside a ``farm.point`` span that emits
+                       ``farm.progress`` events per scan chunk
+                       (frames/s, errors so far, Wilson CI width); the
+                       zero-cost ``NullRecorder`` by default
+                       (DESIGN.md §12).
     """
 
     def __init__(
@@ -148,7 +154,11 @@ class BerFarm:
         axis: str = "shards",
         kernel_decision_depth: int = KERNEL_DECISION_DEPTH,
         scan_chunk: int = 4096,
+        recorder=None,
     ):
+        from repro.obs.trace import NullRecorder
+
+        self.recorder = recorder if recorder is not None else NullRecorder()
         unknown = [p for p in paths if p not in PATHS]
         if unknown:
             raise ValueError(f"unknown decode paths {unknown}; known {PATHS}")
@@ -311,13 +321,35 @@ class BerFarm:
         )
         t0 = time.perf_counter()
         be = fe = 0
-        for lo in range(0, self.n_batches, self.scan_chunk):
-            b, f = runner(
-                decode, code, n_msg, ebn0_db,
-                keys[lo: lo + self.scan_chunk],
-            )
-            be += b
-            fe += f
+        with self.recorder.span(
+            "farm.point", code=code_name, path=path, ebn0_db=float(ebn0_db),
+            n_frames=self.n_batches * self.batch_frames, frame_bits=n_msg,
+        ) as sp:
+            for lo in range(0, self.n_batches, self.scan_chunk):
+                b, f = runner(
+                    decode, code, n_msg, ebn0_db,
+                    keys[lo: lo + self.scan_chunk],
+                )
+                be += b
+                fe += f
+                frames = min(
+                    lo + self.scan_chunk, self.n_batches
+                ) * self.batch_frames
+                elapsed = time.perf_counter() - t0
+                est = estimate_ber(
+                    be, frames * n_msg,
+                    confidence=self.confidence, method="wilson",
+                )
+                sp.event(
+                    "farm.progress",
+                    frames=frames,
+                    frames_per_s=frames / elapsed if elapsed > 0 else 0.0,
+                    bit_errors=be,
+                    frame_errors=fe,
+                    ber=est.ber,
+                    wilson_ci_width=est.ci_hi - est.ci_lo,
+                )
+            sp.set(bit_errors=be, frame_errors=fe)
         dt = time.perf_counter() - t0
         n_frames = self.n_batches * self.batch_frames
         return FarmPoint(
@@ -415,6 +447,16 @@ def main(argv=None) -> int:
     ap.add_argument("--confidence", type=float, default=DEFAULT_CONFIDENCE)
     ap.add_argument("--out", default=None,
                     help="write the JSON trajectory artifact here")
+    ap.add_argument(
+        "--progress", action="store_true",
+        help="emit per-point farm.point spans with farm.progress "
+        "events (frames/s, errors so far, Wilson CI width) to the "
+        "--trace-out JSONL (DESIGN.md §12)",
+    )
+    ap.add_argument(
+        "--trace-out", default="experiments/obs/farm.jsonl",
+        help="JSONL file the --progress span events append to",
+    )
     args = ap.parse_args(argv)
 
     if args.full:
@@ -426,6 +468,11 @@ def main(argv=None) -> int:
         paths = "reference,kernel,time_parallel"
         frames = 32
     ebn0 = args.ebn0 or "2,4,6"
+    recorder = None
+    if args.progress:
+        from repro.obs import JsonlSink, SpanRecorder
+
+        recorder = SpanRecorder(sink=JsonlSink(args.trace_out))
     farm = BerFarm(
         codes=(args.codes or codes).split(","),
         ebn0_dbs=[float(e) for e in ebn0.split(",")],
@@ -435,6 +482,7 @@ def main(argv=None) -> int:
         batch_frames=args.batch_frames,
         seed=args.seed,
         confidence=args.confidence,
+        recorder=recorder,
     )
     print(
         f"ber-farm: {len(farm.codes)} codes x {len(farm.ebn0_dbs)} Eb/N0 "
@@ -453,6 +501,9 @@ def main(argv=None) -> int:
         with open(args.out, "w") as f:
             json.dump(farm_to_json(points, verdicts), f, indent=2)
         print(f"wrote {args.out}")
+    if recorder is not None:
+        recorder.close()
+        print(f"progress spans -> {args.trace_out}")
     print(
         f"ber-gate: {len(verdicts) - len(failed)}/{len(verdicts)} pass"
     )

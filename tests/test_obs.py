@@ -1,0 +1,330 @@
+"""Observability subsystem (DESIGN.md §12): registry semantics,
+Prometheus round-trip through the validating smoke parser, span
+nesting + JSONL replay, the device-profile adapter, and the two engine
+contracts — decode bits identical with tracing off/on for EVERY
+registry code, and ``stats()`` (registry-backed since §12) exactly
+matching an independent legacy recomputation of the same replayed
+trace, backpressure rejects included."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.codes import REGISTRY, encode_standard, get_code, standard_llrs
+from repro.obs import (
+    JsonlSink,
+    MetricsRegistry,
+    NullRecorder,
+    NullRegistry,
+    SpanRecorder,
+    default_registry,
+    set_default_registry,
+)
+from repro.obs.smoke import parse_prometheus
+from repro.serve.engine import DecodeEngine, DecodeRequest
+
+
+def _request(code_name, n_bits, slo, seed, ebn0=5.0):
+    """(true bits, DecodeRequest) through the standard tx chain — same
+    helper as tests/test_engine.py."""
+    rng = np.random.default_rng(seed)
+    code = get_code(code_name)
+    bits = jnp.asarray(rng.integers(0, 2, (1, n_bits)), jnp.int32)
+    llrs = standard_llrs(
+        jax.random.PRNGKey(seed), encode_standard(bits, code), ebn0, code
+    )
+    return np.asarray(bits)[0], DecodeRequest(
+        llrs=np.asarray(llrs)[0], code=code_name, slo=slo
+    )
+
+
+# -- registry semantics -------------------------------------------------------
+
+def test_counter_monotonic_and_labels():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests")
+    c.inc(2, code="a", path="batch")
+    c.inc(3, code="b", path="wava")
+    c.inc(1, code="a", path="batch")
+    assert c.value(code="a", path="batch") == 3
+    assert c.total() == 6
+    assert c.total(code="a") == 3
+    with pytest.raises(ValueError):
+        c.inc(-1, code="a", path="batch")
+
+
+def test_registry_type_conflict_rejected():
+    reg = MetricsRegistry()
+    reg.counter("x_total")
+    with pytest.raises(TypeError):
+        reg.gauge("x_total")
+    # get-or-create: same name + same type returns the same family
+    assert reg.counter("x_total") is reg.counter("x_total")
+
+
+def test_gauge_set_add():
+    g = MetricsRegistry().gauge("depth")
+    g.set(5, q="a")
+    g.add(-2, q="a")
+    assert g.value(q="a") == 3
+
+
+def test_histogram_quantile_matches_percentile():
+    """The bounded exact-value window makes quantile() reproduce
+    np.percentile (linear interpolation) — the engine stats() parity
+    guarantee."""
+    rng = np.random.default_rng(0)
+    h = MetricsRegistry().histogram("lat_seconds", window=4096)
+    vals = rng.gamma(2.0, 0.01, 513)
+    for v in vals:
+        h.observe(float(v), slo="latency")
+    assert h.count(slo="latency") == 513
+    for q in (0.5, 0.99):
+        assert h.quantile(q, slo="latency") == pytest.approx(
+            np.percentile(vals, q * 100), rel=1e-12
+        )
+
+
+def test_null_registry_and_default_swap():
+    """default_registry() is a no-op Null until a launcher installs a
+    real one; the swap returns the previous registry for restoration."""
+    assert isinstance(default_registry(), NullRegistry)
+    default_registry().counter("anything_total").inc(5, a="b")  # no-op
+    reg = MetricsRegistry()
+    prev = set_default_registry(reg)
+    try:
+        assert default_registry() is reg
+    finally:
+        set_default_registry(prev)
+    assert isinstance(default_registry(), NullRegistry)
+
+
+def test_prometheus_round_trip():
+    """render_prometheus() output survives the validating text-format
+    parser, values and label escaping intact."""
+    reg = MetricsRegistry()
+    reg.counter("rq_total", "with \"quotes\" and \\slash").inc(
+        7, code='c"x"', path="a\\b"
+    )
+    reg.gauge("depth").set(3)
+    h = reg.histogram("soj_seconds")
+    for v in (1e-6, 0.003, 2.0, 100.0):
+        h.observe(v, slo="latency")
+    fams = parse_prometheus(reg.render_prometheus())
+    assert fams["rq_total"]["type"] == "counter"
+    (name, labels, value), = fams["rq_total"]["samples"]
+    assert labels == {"code": 'c"x"', "path": "a\\b"} and value == 7
+    assert fams["soj_seconds"]["type"] == "histogram"
+    count = [v for n, _, v in fams["soj_seconds"]["samples"]
+             if n == "soj_seconds_count"]
+    assert count == [4.0]
+
+
+# -- spans --------------------------------------------------------------------
+
+def test_span_nesting_and_jsonl_sink(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    clock = iter(float(i) for i in range(100))
+    rec = SpanRecorder(clock=lambda: next(clock), sink=JsonlSink(path))
+    with rec.span("outer", code="ccsds-k7") as outer:
+        rec.event("ping", n=1)  # open span -> rides on the span record
+        with rec.span("inner") as inner:
+            inner.set(depth=3)
+        outer.set(path="batch")
+    rec.event("solo", n=2)  # no open span -> top-level JSONL line
+    rec.close()
+    assert rec.open_spans == 0
+    (o,) = rec.find("outer")
+    kids = rec.children(o)
+    assert [s.name for s in kids] == ["inner"]
+    assert kids[0].t0 >= o.t0 and kids[0].t1 <= o.t1
+    lines = [json.loads(x) for x in open(path)]
+    # spans write at close (inner first), the standalone event in order
+    assert [(ln["type"], ln["name"]) for ln in lines] == [
+        ("span", "inner"), ("span", "outer"), ("event", "solo"),
+    ]
+    assert lines[0]["parent"] == o.id
+    assert lines[1]["attrs"]["path"] == "batch"
+    assert [e["name"] for e in lines[1]["events"]] == ["ping"]
+    assert lines[2]["span"] is None
+
+
+def test_span_records_exceptions():
+    rec = SpanRecorder()
+    with pytest.raises(RuntimeError):
+        with rec.span("boom"):
+            raise RuntimeError("kapow")
+    (s,) = rec.find("boom")
+    assert s.t1 is not None and "kapow" in s.attrs["error"]
+    assert rec.open_spans == 0
+
+
+def test_null_recorder_is_inert():
+    rec = NullRecorder()
+    assert not rec.enabled
+    with rec.span("x") as s:
+        s.set(a=1)
+        rec.event("e")
+    assert rec.find("x") == [] and rec.open_spans == 0
+
+
+# -- device-profile adapter ---------------------------------------------------
+
+def test_dispatch_profile_attrs_and_achieved():
+    from repro.core.decoder import ViterbiDecoder
+    from repro.obs.profile import dispatch_profile
+
+    dec = ViterbiDecoder.from_standard("ccsds-k7")
+    prof = dispatch_profile(dec, "batch", f_cell=32, n_stages=256)
+    attrs = prof.span_attrs()
+    for key in ("hbm_bytes_modeled", "flops_modeled", "depth_modeled",
+                "intensity", "t_memory_us", "t_compute_us", "bottleneck"):
+        assert key in attrs, key
+    assert attrs["hbm_bytes_modeled"] > 0 and attrs["depth_modeled"] > 0
+    # 1 s wall for a tiny cell: far off the v5e roofline but nonzero
+    ach = prof.achieved(wall_s=1.0)
+    assert 0.0 < ach["achieved_hbm_frac"] < 1.0
+    assert 0.0 < ach["achieved_flops_frac"] < 1.0
+    # lru cache: same cell -> same object, no traffic recomputation
+    assert dispatch_profile(dec, "batch", 32, 256) is prof
+
+
+def test_measured_depth_counts_scan_trips():
+    from repro.obs.profile import measured_depth
+
+    def body(c, x):
+        return c + x, c
+
+    def fn(xs):
+        return jax.lax.scan(body, jnp.float32(0), xs)[0]
+
+    aval = jax.ShapeDtypeStruct((37,), jnp.float32)
+    assert measured_depth(fn, aval) == 37
+
+
+# -- engine contracts ---------------------------------------------------------
+
+def _registry_workload():
+    """Mixed ragged workload over every registry standard."""
+    reqs = []
+    for i, name in enumerate(sorted(REGISTRY)):
+        tb = REGISTRY[name].termination == "tailbiting"
+        for j, n in enumerate((40,) if tb else (57, 90)):
+            _, req = _request(name, n, "throughput", 31 * i + j)
+            reqs.append(req)
+    return reqs
+
+
+def test_engine_bits_identical_obs_on_off(tmp_path):
+    """Decode bits for every registry code (punctured + tail-biting
+    included) are identical with tracing disabled and with a live
+    SpanRecorder + JSONL sink — instrumentation never touches jitted
+    code."""
+    reqs = _registry_workload()
+    off = DecodeEngine(max_batch=8).decode(reqs)
+    rec = SpanRecorder(sink=JsonlSink(str(tmp_path / "e.jsonl")))
+    engine_on = DecodeEngine(max_batch=8, recorder=rec)
+    on = engine_on.decode(reqs)
+    rec.close()
+    assert len(off) == len(on) == len(reqs)
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a, b)
+    # and the trace actually covered the work
+    assert len(rec.find("engine.batch")) == len(engine_on.batch_log)
+    disp = rec.find("engine.dispatch")
+    assert disp and all("hbm_bytes_modeled" in s.attrs for s in disp)
+
+
+def test_stats_match_legacy_recomputation():
+    """Registry-backed stats() == an independent recomputation of the
+    same replayed trace from tickets + batch_log: request lifecycle
+    counts (backpressure reject included), batches/paths, occupancy,
+    padding waste, jit hit/miss, and exact p50/p99 sojourn."""
+    engine = DecodeEngine(max_batch=4, max_pending=6,
+                          max_wait={"latency": 0.001, "throughput": 0.004})
+    tickets = []
+    now = 0.0
+    for i in range(18):  # bursts of 9 against max_pending=6 -> rejects
+        slo = "latency" if i % 3 == 0 else "throughput"
+        _, req = _request("ccsds-k7", 48 + 5 * (i % 4), slo, seed=i)
+        tickets.append(engine.submit(req, now=now))
+        now += 1e-4
+        if i % 9 == 8:
+            engine.poll(now=now)
+            now += 0.01
+    engine.drain(now=now)
+    s = engine.stats()
+
+    dropped = [t for t in tickets if t.dropped]
+    done = [t for t in tickets if t.bits is not None]
+    assert dropped and done  # the trace exercised both outcomes
+    assert s["rejected"] == len(dropped)
+    assert s["submitted"] == len(tickets) - len(dropped)
+    assert s["completed"] == len(done)
+    assert s["queue_depth"] == 0 and s["batches"] == len(engine.batch_log)
+
+    paths = {}
+    for b in engine.batch_log:
+        paths[b["path"]] = paths.get(b["path"], 0) + 1
+    assert s["paths"] == paths
+
+    real_f = sum(b["n_real"] for b in engine.batch_log)
+    cell_f = sum(b["f_cell"] for b in engine.batch_log)
+    assert s["occupancy"] == pytest.approx(real_f / cell_f)
+    # ccsds-k7 is rate-1/2 (beta=2): cell elems = f * l_cell * 2
+    real_e = 2 * sum(t.n_out for t in done)
+    cell_e = 2 * sum(b["f_cell"] * b["cell"][2] for b in engine.batch_log)
+    assert s["padding_waste"] == pytest.approx(1.0 - real_e / cell_e)
+
+    # one jit lookup per batch on this session-free workload
+    assert s["jit_cache"]["misses"] == s["jit_cache"]["entries"]
+    assert (s["jit_cache"]["hits"] + s["jit_cache"]["misses"]
+            == s["batches"])
+
+    for slo in ("latency", "throughput"):
+        soj = [t.sojourn for t in done if t.slo == slo]
+        assert s["latency"][slo]["n"] == len(soj)
+        assert s["latency"][slo]["p50"] == pytest.approx(
+            np.percentile(soj, 50), rel=1e-12)
+        assert s["latency"][slo]["p99"] == pytest.approx(
+            np.percentile(soj, 99), rel=1e-12)
+
+
+def test_engine_prometheus_parses_and_counts():
+    engine = DecodeEngine(max_batch=8)
+    reqs = [_request("ccsds-k7", 60 + i, "throughput", seed=i)[1]
+            for i in range(5)]
+    engine.decode(reqs)
+    fams = parse_prometheus(engine.registry.render_prometheus())
+    total = sum(v for _, lbl, v in fams["engine_requests_total"]["samples"]
+                if lbl.get("event") == "completed")
+    assert total == len(reqs)
+    assert fams["engine_sojourn_seconds"]["type"] == "histogram"
+
+
+# -- farm progress spans ------------------------------------------------------
+
+def test_farm_progress_spans():
+    """BerFarm with an injected recorder emits one farm.point span per
+    grid point with farm.progress events carrying running error counts
+    and the Wilson CI width."""
+    from repro.verify.farm import BerFarm
+
+    rec = SpanRecorder()
+    farm = BerFarm(
+        codes=["ccsds-k7"], ebn0_dbs=[4.0], paths=["reference"],
+        frames_per_point=8, frame_budget=128, batch_frames=4,
+        scan_chunk=1, recorder=rec,
+    )
+    farm.run()
+    points = rec.find("farm.point")
+    assert len(points) == 1 and rec.open_spans == 0
+    (p,) = points
+    assert p.attrs["code"] == "ccsds-k7" and "bit_errors" in p.attrs
+    prog = [e for e in p.events if e["name"] == "farm.progress"]
+    assert len(prog) == 2  # 2 batches / scan_chunk=1
+    assert prog[-1]["attrs"]["frames"] == 8
+    assert prog[-1]["attrs"]["wilson_ci_width"] > 0
+    assert prog[-1]["attrs"]["bit_errors"] == p.attrs["bit_errors"]
