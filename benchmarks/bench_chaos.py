@@ -1,0 +1,185 @@
+"""Chaos replay of the DecodeEngine under a kill schedule (DESIGN.md §13).
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos
+    PYTHONPATH=src python -m benchmarks.run --only chaos
+
+The bench_engine mixed-tenant workload plus a set of chunked-streaming
+sessions is replayed twice at the saturating offered load: once clean
+(the no-chaos baseline) and once under a deterministic fault schedule
+(>= 3 device failures, >= 2 timeouts, plus a straggler and a transient
+compile error), with periodic session checkpointing and a
+checkpoint/restore failover cycle at the end.
+
+Row semantics (schema details in docs/BENCHMARKS.md):
+
+  * ``chaos/latency@slo=..`` — p50/p99 VIRTUAL sojourn per SLO class
+    under the fault schedule (queueing + assembly + virtual backoff
+    accounting; decode service time is not on the virtual clock).
+  * ``chaos/occupancy`` — batch occupancy and padding waste of the
+    chaos replay, with ``occ_ratio`` = chaos occupancy / no-chaos
+    baseline occupancy.  The ISSUE acceptance gate reads occ_ratio
+    >= 0.8: retries and degraded re-dispatches must not unravel batch
+    assembly.
+  * ``chaos/faults`` — injected-fault totals, engine retries (bounded
+    by faults), degradation-ladder reroutes, failovers, checkpoints
+    written, and ``recovered=K/N``: sessions whose total output
+    (including the checkpoint/replay failover session) was bit-identical
+    to uninterrupted ``decode_stream_chunked``.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.bench_engine import MAX_WAIT, TICK, _workload
+
+
+def _replay(requests, sessions, load, max_batch, depth, chaos=None,
+            checkpoint_dir=None):
+    """Replay the mixed workload + session streams on a virtual clock;
+    returns (engine, session tickets {sid: [tickets]}, wall seconds)."""
+    from repro.serve.engine import DecodeEngine
+
+    engine = DecodeEngine(
+        max_batch=max_batch, max_wait=dict(MAX_WAIT),
+        decision_depth=depth, chaos=chaos, dispatch_timeout=0.1,
+        checkpoint_dir=checkpoint_dir, checkpoint_interval=0.05,
+    )
+    chunk = {sid: 0 for sid in sessions}
+    tickets = {sid: [] for sid in sessions}
+    for sid in sorted(sessions):
+        engine.open_session("ccsds-k7", sid=sid, now=0.0)
+    rate = load * max_batch / MAX_WAIT["throughput"]
+    arrivals = [i / rate for i in range(len(requests))]
+    n_chunks = max(len(c) for c in sessions.values()) if sessions else 0
+    span = arrivals[-1] if arrivals else 1.0
+    t0 = time.perf_counter()
+    now, i = 0.0, 0
+    while i < len(requests) or engine.queue_depth():
+        while i < len(requests) and arrivals[i] <= now:
+            engine.submit(requests[i][0], now=now)
+            i += 1
+        # session chunks arrive spread across the replay window
+        for sid in sorted(sessions):
+            due = int(min(now / span, 1.0) * n_chunks)
+            while chunk[sid] < min(due + 1, len(sessions[sid])):
+                tickets[sid].append(engine.submit_chunk(
+                    sid, sessions[sid][chunk[sid]], now=now
+                ))
+                chunk[sid] += 1
+        engine.poll(now=now)
+        now += TICK
+    for sid in sorted(sessions):  # any stragglers
+        while chunk[sid] < len(sessions[sid]):
+            tickets[sid].append(engine.submit_chunk(
+                sid, sessions[sid][chunk[sid]], now=now
+            ))
+            chunk[sid] += 1
+    engine.drain(now=now)
+    return engine, tickets, time.perf_counter() - t0
+
+
+def bench(n_requests: int = 240, base_len: int = 256, max_batch: int = 16,
+          n_sessions: int = 2, n_chunks: int = 4, chunk_len: int = 256):
+    """Returns (name, us_per_call, derived) rows for run.py."""
+    from repro.core.decoder import ViterbiDecoder
+    from repro.runtime.chaos import ChaosInjector, ChaosSchedule, FaultEvent
+
+    depth = chunk_len
+    rng = np.random.default_rng(0)
+    streams = {
+        f"s{i}": rng.normal(0, 1, (n_chunks * chunk_len, 2)).astype(
+            np.float32
+        )
+        for i in range(n_sessions)
+    }
+    sessions = {
+        sid: [s[j * chunk_len:(j + 1) * chunk_len]
+              for j in range(n_chunks)]
+        for sid, s in streams.items()
+    }
+    dec = ViterbiDecoder.from_standard("ccsds-k7", decision_depth=depth)
+    refs = {
+        sid: np.asarray(dec.decode_stream_chunked(
+            s[None], chunk_len=chunk_len, initial_state=None
+        ))[0]
+        for sid, s in streams.items()
+    }
+    requests = _workload(n_requests, base_len)
+    load = 16.0  # the saturating point of the bench_engine sweep
+
+    # -- no-chaos baseline -------------------------------------------------
+    base_eng, base_tickets, _ = _replay(
+        requests, sessions, load, max_batch, depth
+    )
+    base_occ = base_eng.stats()["occupancy"]
+
+    # -- chaos replay: >=3 device failures + >=2 timeouts + extras --------
+    schedule = ChaosSchedule(
+        [FaultEvent(at=a, kind="device_failure") for a in (2, 9, 17)]
+        + [FaultEvent(at=a, kind="timeout") for a in (5, 13)]
+        + [FaultEvent(at=11, kind="slow", delay=0.25),
+           FaultEvent(at=15, kind="compile_error")]
+    )
+    injector = ChaosInjector(schedule)
+    rows = []
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        engine, tickets, wall = _replay(
+            requests, sessions, load, max_batch, depth,
+            chaos=injector, checkpoint_dir=ckpt_dir,
+        )
+        # final checkpoint BEFORE closing (a close removes the session)
+        engine.checkpoint_sessions(now=1e9)
+        recovered = 0
+        tails = {}
+        for sid in sorted(sessions):
+            tails[sid] = engine.close_session(sid, now=1e9)
+            got = np.concatenate(
+                [t.bits for t in tickets[sid]] + [tails[sid]]
+            )
+            recovered += int(np.array_equal(got, refs[sid]))
+        # checkpoint/restore failover: a fresh engine restores the
+        # final session table and must flush the same tails bit-exactly
+        from repro.serve.engine import DecodeEngine
+
+        b = DecodeEngine(max_batch=max_batch, decision_depth=depth,
+                         checkpoint_dir=ckpt_dir)
+        b.restore_sessions(now=0.0)
+        for sid in sorted(sessions):
+            if not np.array_equal(
+                b.close_session(sid, now=0.0), tails[sid]
+            ):
+                recovered = 0  # failover broke bit-exactness
+        s = engine.stats()
+        occ_ratio = s["occupancy"] / base_occ if base_occ else 0.0
+        for slo, v in sorted(s["latency"].items()):
+            rows.append((
+                f"chaos/latency@slo={slo}",
+                v["p50"] * 1e6,
+                f"p50={v['p50']*1e3:.2f}ms;p99={v['p99']*1e3:.2f}ms"
+                f";n={v['n']};virtual;under-chaos",
+            ))
+        rows.append((
+            "chaos/occupancy",
+            wall / max(s["batches"], 1) * 1e6,
+            f"occupancy={s['occupancy']:.3f};waste={s['padding_waste']:.3f}"
+            f";occ_ratio={occ_ratio:.3f};baseline={base_occ:.3f}"
+            f";batches={s['batches']}",
+        ))
+        rows.append((
+            "chaos/faults",
+            0.0,
+            f"faults={injector.total_injected()};retries={s['retries']}"
+            f";degraded={s['degraded']};failovers={s['failovers']}"
+            f";expired={s['expired']};failed={s['failed']}"
+            f";checkpoints={s['checkpoints']}"
+            f";recovered={recovered}/{len(sessions)}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

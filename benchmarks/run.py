@@ -24,6 +24,12 @@ the perf trajectory is tracked across PRs:
   * bench_engine     — §10 multi-tenant engine offered-load sweep:
                        p50/p99 virtual sojourn per SLO class, batch
                        occupancy + padding waste per load point
+  * bench_chaos      — §13 fault-tolerance replay: the engine workload
+                       under a deterministic kill schedule (device
+                       failures, timeouts, stragglers, compile flakes)
+                       with session checkpoint/failover — occupancy
+                       ratio vs the no-chaos baseline, retry/failover
+                       totals, recovered-session bit-exactness count
   * roofline_report  — §Roofline summary from the dry-run artifacts
 
 Artifact schemas (column meanings, units, regeneration commands) are
@@ -58,6 +64,14 @@ _CI_HI = re.compile(r"hi=([0-9.e+-]+)")
 _ERRORS = re.compile(r"errors=([0-9]+)")
 _BITS = re.compile(r"bits=([0-9]+)")
 _GATE = re.compile(r"gate=(pass|fail|ref)")
+# §13 chaos-suite columns: post-failover occupancy ratio vs the
+# no-chaos baseline (the >= 0.8 acceptance gate), injected-fault /
+# retry / failover totals and the recovered-session bit-exactness count
+_OCC_RATIO = re.compile(r"occ_ratio=([0-9.]+)")
+_FAULTS = re.compile(r"faults=([0-9]+)")
+_RETRIES = re.compile(r"retries=([0-9]+)")
+_FAILOVERS = re.compile(r"failovers=([0-9]+)")
+_RECOVERED = re.compile(r"recovered=([0-9]+)/([0-9]+)")
 
 
 def _artifact_rows(rows):
@@ -128,6 +142,22 @@ def _artifact_rows(rows):
         m = _GATE.search(row["derived"])
         if m:
             row["gate"] = m.group(1)
+        m = _OCC_RATIO.search(row["derived"])
+        if m:
+            row["occupancy_ratio"] = float(m.group(1))
+        m = _FAULTS.search(row["derived"])
+        if m:
+            row["faults_injected"] = int(m.group(1))
+        m = _RETRIES.search(row["derived"])
+        if m:
+            row["retries"] = int(m.group(1))
+        m = _FAILOVERS.search(row["derived"])
+        if m:
+            row["failovers"] = int(m.group(1))
+        m = _RECOVERED.search(row["derived"])
+        if m:
+            row["sessions_recovered"] = int(m.group(1))
+            row["sessions_total"] = int(m.group(2))
         if ";upper" in row["derived"]:
             row["upper_bound"] = True
         out.append(row)
@@ -203,6 +233,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_ber,
+        bench_chaos,
         bench_engine,
         bench_kernel,
         bench_latency,
@@ -251,6 +282,12 @@ def main() -> None:
             n_requests=240 if args.fast else 600,
             base_len=256 if args.fast else 512,
             max_batch=16 if args.fast else 32,
+        ),
+        "chaos": lambda: bench_chaos.bench(
+            n_requests=120 if args.fast else 240,
+            base_len=256,
+            max_batch=16,
+            n_chunks=3 if args.fast else 4,
         ),
         "roofline": roofline_report.bench,
     }

@@ -56,6 +56,7 @@ from repro.core.viterbi import (
 __all__ = [
     "frame_mesh",
     "engine_dispatch_ready",
+    "replan_mesh",
     "sharded_decode_frames",
     "sharded_decode_streams",
     "sharded_decode_time_parallel",
@@ -83,6 +84,25 @@ def engine_dispatch_ready(
     mesh = mesh or frame_mesh(axis=axis)
     n_dev = mesh.shape[axis]
     return n_frames >= n_dev and n_frames % n_dev == 0
+
+
+def replan_mesh(mesh: Mesh, failed_devices) -> Optional[Mesh]:
+    """Shrink a 1-D frame mesh onto its surviving devices
+    (DESIGN.md §13 failover): drop every device whose ``id`` is in
+    ``failed_devices`` and keep the largest power-of-two prefix of the
+    survivors — the same largest-power-of-two rule as
+    ``runtime.failure.ElasticPlanner`` (engine frame rungs are powers of
+    two, so a power-of-two device count keeps ``engine_dispatch_ready``
+    divisibility intact).  Returns None when no device survives (the
+    engine then degrades sharded cells to the single-device batch
+    path)."""
+    failed = set(int(d) for d in failed_devices)
+    axis = mesh.axis_names[0]
+    alive = [d for d in mesh.devices.reshape(-1) if d.id not in failed]
+    if not alive:
+        return None
+    n = 1 << (len(alive).bit_length() - 1)
+    return Mesh(np.asarray(alive[:n]), (axis,))
 
 
 def _pad_to(llrs: jnp.ndarray, multiple: int) -> jnp.ndarray:

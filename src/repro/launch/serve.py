@@ -162,7 +162,14 @@ def serve_engine(args):
     With ``--metrics-jsonl PATH`` the run records the §12 observability
     feed: request-lifecycle spans and a final metrics snapshot go to
     PATH (render it with ``python -m repro.obs.top --jsonl PATH``), and
-    the drain prints the port-less Prometheus text dump."""
+    the drain prints the port-less Prometheus text dump.
+
+    With ``--chaos SCHEDULE.json`` the replay runs under the §13
+    fault-injection harness (the JSON is a ``runtime.chaos``
+    ``ChaosSchedule``); ``--checkpoint-dir DIR`` enables periodic
+    session-table checkpointing, and the graceful drain then writes a
+    final session checkpoint and reports the failover stats (faults,
+    retries, degradations, failovers, expired/failed requests)."""
     from repro.codes import encode_standard, get_code, standard_llrs
     from repro.obs import Observability, set_default_registry
     from repro.serve.step import make_decode_engine
@@ -180,6 +187,11 @@ def serve_engine(args):
         enabled=args.metrics_jsonl is not None, jsonl=args.metrics_jsonl
     )
     prev_reg = set_default_registry(obs.registry)  # decoder path counters
+    chaos = None
+    if args.chaos is not None:
+        from repro.runtime.chaos import ChaosInjector, ChaosSchedule
+
+        chaos = ChaosInjector(ChaosSchedule.from_file(args.chaos))
     engine = make_decode_engine(
         use_kernel=args.use_kernel,
         max_batch=args.streams,
@@ -187,6 +199,12 @@ def serve_engine(args):
                   "throughput": args.max_wait_ms / 1e3},
         registry=obs.registry,
         recorder=obs.recorder,
+        chaos=chaos,
+        dispatch_timeout=0.1,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_interval=(
+            None if args.checkpoint_dir is None else args.max_wait_ms / 1e3
+        ),
     )
     rng = np.random.default_rng(0)
     lens = [args.stream_len // 4, args.stream_len // 3, args.stream_len // 2]
@@ -219,11 +237,15 @@ def serve_engine(args):
         peak_q = max(peak_q, engine.queue_depth())
         now += tick
     engine.drain(now=now)  # graceful drain: flush partial cells
+    final_ckpt = engine.checkpoint_sessions(now=now)  # §13 drain contract
     dt = time.perf_counter() - t0
-    total = err = dropped = 0
+    total = err = dropped = errored = 0
     for (_, _, bits), t in zip(reqs, tickets):
         if t.dropped:  # backpressure sheds, it doesn't corrupt BER
             dropped += 1
+            continue
+        if t.error is not None:  # §13 typed errors (never silent drops)
+            errored += 1
             continue
         total += bits.size
         err += int((t.bits != bits).sum())
@@ -239,6 +261,16 @@ def serve_engine(args):
         f"dropped={dropped} jit_cache={s['jit_cache']} "
         f"latency(virtual)={lat}"
     )
+    if args.chaos is not None or args.checkpoint_dir is not None:
+        # the §13 failover report of the graceful drain
+        print(
+            f"[engine] faults={s['faults']} retries={s['retries']} "
+            f"degraded={s['degraded']} failovers={s['failovers']} "
+            f"expired={s['expired']} failed={errored} "
+            f"checkpoints={s['checkpoints']}"
+        )
+        if final_ckpt is not None:
+            print(f"[engine] final session checkpoint -> {final_ckpt}")
     if args.metrics_jsonl is not None:
         # the §12 port-less drain dump: no metrics port to scrape, so
         # the Prometheus text goes to stdout and the JSONL gets a final
@@ -320,6 +352,20 @@ def main():
         "--max-wait-ms", type=float, default=10.0,
         help="engine service: throughput-class batch-assembly deadline "
         "(latency class waits a quarter of this)",
+    )
+    ap.add_argument(
+        "--chaos", default=None, metavar="SCHEDULE.json",
+        help="engine service: run the replay under the §13 "
+        "fault-injection harness — the JSON file is a "
+        "runtime.chaos.ChaosSchedule (attempt-indexed device failures, "
+        "timeouts, stragglers, compile errors)",
+    )
+    ap.add_argument(
+        "--checkpoint-dir", default=None,
+        help="engine service: periodically checkpoint the "
+        "chunked-streaming session table here (DESIGN.md §13); the "
+        "graceful drain writes a final checkpoint and prints failover "
+        "stats",
     )
     ap.add_argument(
         "--metrics-jsonl", default=None,

@@ -20,6 +20,14 @@ sink) for handing to ``DecodeEngine``/``BerFarm``; the module-level
 library-level instrumentation (decoder path counters) is free by
 default.
 
+The §13 fault-tolerance layer accounts through the same registry:
+``engine_faults_total{kind,path}``, ``engine_retries_total{path}``,
+``engine_backoff_seconds_total{path}`` (virtual backoff budget —
+recorded, not slept), ``engine_degraded_total{from,to}``,
+``engine_failover_total`` and ``engine_checkpoints_total``, next to the
+``expired``/``failed``/``restored`` lifecycle events on the request and
+session families.
+
 CLI entry points: ``python -m repro.obs.top`` (terminal snapshot) and
 ``python -m repro.obs.smoke`` (the CI gate).
 """

@@ -1,0 +1,238 @@
+"""Deterministic fault injection for the serving runtime (DESIGN.md §13).
+
+The engine's fault-tolerance machinery (retry with bounded backoff, the
+degradation ladder, mesh failover, session checkpoint/replay) is only
+testable if failures arrive deterministically.  This module provides
+exactly that: a ``ChaosSchedule`` is a list of one-shot ``FaultEvent``s
+indexed by DISPATCH ATTEMPT — the engine numbers every dispatch it makes
+(batch cells, session groups, retries, degraded re-dispatches all
+count), and the ``ChaosInjector`` fires the events whose ``at`` matches
+the current attempt index.  Because the engine iterates cells and
+sessions in sorted order on a virtual clock, attempt indices are fully
+deterministic: the same schedule against the same workload injects the
+same faults at the same dispatches, every run.
+
+Four fault kinds mirror what real accelerator fleets see:
+
+  * ``device_failure`` — a device drops out of the mesh; raised as
+    ``DeviceFailure(device=i)``.  The engine removes the device,
+    re-plans the mesh (``distributed.decoder.replan_mesh``) and retries
+    on the survivors, degrading sharded -> batch when too few remain.
+  * ``timeout`` — the dispatch exceeds its deadline; raised as
+    ``DispatchTimeout``.  Retried with exponential backoff.
+  * ``slow`` — a straggler: ``on_dispatch`` RETURNS a simulated delay
+    instead of raising; the engine treats delays past its
+    ``dispatch_timeout`` as timeouts (the §13 straggler-to-timeout
+    promotion) and absorbs shorter ones.
+  * ``compile_error`` — a transient jit/compile failure; raised as
+    ``TransientCompileError`` and retried (real XLA compile flakes are
+    transient by nature: OOM races, cache eviction).
+
+Schedules are either hand-written (tests pin events to known attempt
+indices) or drawn from a seeded RNG (``ChaosSchedule.generate``), and
+round-trip through JSON for the ``launch/serve.py --chaos`` flag.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import pathlib
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "InjectedFault",
+    "DeviceFailure",
+    "DispatchTimeout",
+    "TransientCompileError",
+    "FaultEvent",
+    "ChaosSchedule",
+    "ChaosInjector",
+    "FAULT_KINDS",
+]
+
+FAULT_KINDS = ("device_failure", "timeout", "slow", "compile_error")
+
+
+class InjectedFault(RuntimeError):
+    """Base of all injected dispatch faults; ``kind`` names the family
+    (the engine's ``engine_faults_total`` label)."""
+
+    kind = "fault"
+
+
+class DeviceFailure(InjectedFault):
+    """A device dropped out of the mesh mid-dispatch."""
+
+    kind = "device_failure"
+
+    def __init__(self, device: Optional[int] = None):
+        super().__init__(f"device {device} failed")
+        self.device = device
+
+
+class DispatchTimeout(InjectedFault):
+    """The dispatch exceeded its deadline (injected, or a promoted
+    straggler delay)."""
+
+    kind = "timeout"
+
+
+class TransientCompileError(InjectedFault):
+    """A transient jit/compile failure (retryable by definition)."""
+
+    kind = "compile_error"
+
+
+_EXC = {
+    "device_failure": DeviceFailure,
+    "timeout": DispatchTimeout,
+    "compile_error": TransientCompileError,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: fires at dispatch attempt ``at`` (one-shot).
+
+    ``path`` restricts the event to dispatches on that decode path
+    (None = any path); an event whose attempt index passes with a
+    non-matching path is skipped, not deferred — schedules stay
+    attempt-indexed and deterministic.  ``device`` names the failing
+    device for ``device_failure``; ``delay`` is the straggler delay in
+    seconds for ``slow``.
+    """
+
+    at: int
+    kind: str
+    device: Optional[int] = None
+    delay: float = 0.0
+    path: Optional[str] = None
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; known: {FAULT_KINDS}"
+            )
+
+
+class ChaosSchedule:
+    """An immutable, attempt-indexed list of ``FaultEvent``s."""
+
+    def __init__(self, events: Iterable[FaultEvent]):
+        self.events: Tuple[FaultEvent, ...] = tuple(
+            sorted(events, key=lambda e: (e.at, e.kind))
+        )
+
+    def counts(self) -> Dict[str, int]:
+        c: Dict[str, int] = collections.Counter(e.kind for e in self.events)
+        return dict(c)
+
+    # -- (de)serialization -------------------------------------------------
+
+    def to_json(self) -> dict:
+        events = []
+        for e in self.events:
+            d = {"at": e.at, "kind": e.kind}
+            if e.device is not None:
+                d["device"] = e.device
+            if e.delay:
+                d["delay"] = e.delay
+            if e.path is not None:
+                d["path"] = e.path
+            events.append(d)
+        return {"events": events}
+
+    @classmethod
+    def from_json(cls, obj) -> "ChaosSchedule":
+        if isinstance(obj, str):
+            obj = json.loads(obj)
+        events = obj["events"] if isinstance(obj, dict) else obj
+        return cls(FaultEvent(**e) for e in events)
+
+    @classmethod
+    def from_file(cls, path) -> "ChaosSchedule":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+    # -- seeded generation -------------------------------------------------
+
+    @classmethod
+    def generate(
+        cls,
+        seed: int,
+        n_attempts: int,
+        p_device: float = 0.02,
+        p_timeout: float = 0.02,
+        p_slow: float = 0.02,
+        p_compile: float = 0.01,
+        n_devices: int = 1,
+        slow_delay: float = 0.05,
+    ) -> "ChaosSchedule":
+        """Draw a schedule from a seeded RNG: each attempt index
+        independently hosts at most one fault, with the given per-kind
+        probabilities.  Same seed -> same schedule, always."""
+        rng = np.random.default_rng(seed)
+        probs = (p_device, p_timeout, p_slow, p_compile)
+        edges = np.cumsum(probs)
+        if edges[-1] > 1.0:
+            raise ValueError(f"fault probabilities sum to {edges[-1]} > 1")
+        events: List[FaultEvent] = []
+        for at in range(n_attempts):
+            u = rng.random()
+            if u >= edges[-1]:
+                continue
+            kind = FAULT_KINDS[int(np.searchsorted(edges, u, side="right"))]
+            events.append(FaultEvent(
+                at=at,
+                kind=kind,
+                device=(int(rng.integers(0, n_devices))
+                        if kind == "device_failure" else None),
+                delay=float(slow_delay) if kind == "slow" else 0.0,
+            ))
+        return cls(events)
+
+
+class ChaosInjector:
+    """Fires a ``ChaosSchedule`` against a stream of engine dispatches.
+
+    The engine calls ``on_dispatch(code, path)`` immediately before
+    every dispatch (including retries and degraded re-dispatches); the
+    call increments the attempt counter, raises the typed exception for
+    any matching raising event, and returns the summed straggler delay
+    of matching ``slow`` events (0.0 when none).  ``injected`` counts
+    fired events by kind — the bounded-retry assertions in
+    ``tests/test_chaos.py`` and ``runtime/chaos_smoke.py`` compare the
+    engine's retry counters against it.
+    """
+
+    def __init__(self, schedule: ChaosSchedule):
+        self.schedule = schedule
+        self._by_at: Dict[int, List[FaultEvent]] = {}
+        for e in schedule.events:
+            self._by_at.setdefault(e.at, []).append(e)
+        self.attempts = 0
+        self.injected: Dict[str, int] = collections.Counter()
+
+    def on_dispatch(self, code: str, path: str) -> float:
+        """Advance the attempt counter; raise or return a delay."""
+        at = self.attempts
+        self.attempts += 1
+        delay = 0.0
+        for e in self._by_at.get(at, ()):
+            if e.path is not None and e.path != path:
+                continue
+            self.injected[e.kind] += 1
+            if e.kind == "slow":
+                delay += e.delay
+            else:
+                raise _EXC[e.kind](e.device) if (
+                    e.kind == "device_failure"
+                ) else _EXC[e.kind](
+                    f"injected {e.kind} at attempt {at} ({code}/{path})"
+                )
+        return delay
+
+    def total_injected(self) -> int:
+        return int(sum(self.injected.values()))

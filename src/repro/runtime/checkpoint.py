@@ -9,9 +9,19 @@ The manifest is written LAST with status="complete" — a torn checkpoint
 
 ``save_async`` runs the serialization on a writer thread so the train loop
 only blocks on the device->host copy, not the disk write (the standard
-async-checkpoint overlap).  Restore resharding: arrays are loaded on host
-and ``jax.device_put`` with the CURRENT mesh's shardings — a checkpoint
-written on one mesh restores onto any other (elastic re-mesh path).
+async-checkpoint overlap); it returns a ``SaveHandle`` whose ``result()``
+re-raises anything the writer thread hit — a failed background write is
+an observable error, never a silent one.  Restore resharding: arrays are
+loaded on host and ``jax.device_put`` with the CURRENT mesh's shardings —
+a checkpoint written on one mesh restores onto any other (elastic
+re-mesh path).
+
+``save_sessions`` / ``load_sessions`` layer the serving engine's
+chunked-streaming session table (DESIGN.md §13) on the same format:
+per-session ``StreamState`` arrays (path metrics + survivor ring) go in
+the npz, the host-side scalars (stream position, code name, consumed
+steps) ride the manifest's ``extra`` — so session checkpoints inherit
+the manifest-last torn-write detection for free.
 """
 from __future__ import annotations
 
@@ -19,12 +29,21 @@ import json
 import pathlib
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save",
+    "save_async",
+    "SaveHandle",
+    "restore",
+    "latest_step",
+    "CheckpointManager",
+    "save_sessions",
+    "load_sessions",
+]
 
 
 def _flatten(tree) -> dict:
@@ -51,14 +70,53 @@ def save(ckpt_dir, step: int, tree, extra: Optional[dict] = None) -> pathlib.Pat
     return out
 
 
-def save_async(ckpt_dir, step: int, tree, extra=None) -> threading.Thread:
-    """Device->host copy now; disk write on a background thread."""
+class SaveHandle:
+    """Handle on an async checkpoint write.
+
+    The daemon writer thread used to swallow exceptions — a full disk or
+    unwritable directory produced a silently missing checkpoint.  The
+    handle captures whatever the thread raises and surfaces it to the
+    caller: ``result()`` joins and returns the written path or re-raises
+    the captured exception; ``join()`` keeps Thread-compatibility for
+    old call sites and re-raises too.
+    """
+
+    def __init__(self, fn, args):
+        self._box: dict = {}
+        self._thread = threading.Thread(
+            target=self._run, args=(fn, args), daemon=True
+        )
+        self._thread.start()
+
+    def _run(self, fn, args):
+        try:
+            self._box["result"] = fn(*args)
+        except BaseException as e:  # noqa: BLE001 — captured, re-raised
+            self._box["error"] = e
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def exception(self, timeout: Optional[float] = None):
+        self._thread.join(timeout)
+        return self._box.get("error")
+
+    def result(self, timeout: Optional[float] = None):
+        self._thread.join(timeout)
+        if "error" in self._box:
+            raise self._box["error"]
+        return self._box.get("result")
+
+    def join(self, timeout: Optional[float] = None):
+        self.result(timeout)
+
+
+def save_async(ckpt_dir, step: int, tree, extra=None) -> SaveHandle:
+    """Device->host copy now; disk write on a background thread.
+    Returns a ``SaveHandle`` — call ``.result()`` to join and observe
+    any write failure."""
     host_tree = jax.tree.map(np.asarray, tree)  # blocks on D2H only
-    t = threading.Thread(
-        target=save, args=(ckpt_dir, step, host_tree, extra), daemon=True
-    )
-    t.start()
-    return t
+    return SaveHandle(save, (ckpt_dir, step, host_tree, extra))
 
 
 def latest_step(ckpt_dir) -> Optional[int]:
@@ -103,33 +161,39 @@ def _lookup(tree, path):
 
 
 class CheckpointManager:
-    """Keeps the last N checkpoints, saves every ``interval`` steps."""
+    """Keeps the last N checkpoints, saves every ``interval`` steps.
+
+    A failed background write surfaces on the NEXT ``maybe_save`` or on
+    ``wait()`` (the ``SaveHandle`` re-raise contract) — the loop driving
+    the manager observes the error at its next checkpoint boundary
+    instead of discovering a hole in the checkpoint history at restore
+    time."""
 
     def __init__(self, ckpt_dir, interval: int = 100, keep: int = 3):
         self.dir = pathlib.Path(ckpt_dir)
         self.interval = interval
         self.keep = keep
-        self._pending: Optional[threading.Thread] = None
+        self._pending: Optional[SaveHandle] = None
 
     def maybe_save(self, step: int, tree, extra=None) -> bool:
         if step % self.interval:
             return False
         if self._pending is not None:
-            self._pending.join()  # one in flight at a time
+            self._pending.result()  # one in flight; surfaces prior errors
         host_tree = jax.tree.map(np.asarray, tree)  # block on D2H only
 
-        def write():
-            save(self.dir, step, host_tree, extra)
+        def write(*_):
+            out = save(self.dir, step, host_tree, extra)
             self._gc()  # in-thread: runs after the new step exists
+            return out
 
-        self._pending = threading.Thread(target=write, daemon=True)
-        self._pending.start()
+        self._pending = SaveHandle(write, ())
         return True
 
     def wait(self):
         if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+            handle, self._pending = self._pending, None
+            handle.result()
 
     def _gc(self):
         steps = sorted(
@@ -140,3 +204,63 @@ class CheckpointManager:
             for f in d.iterdir():
                 f.unlink()
             d.rmdir()
+
+
+# -- serving-engine session tables (DESIGN.md §13) -------------------------
+#
+# One session record is {"lam": (F, S) metrics, "hist": survivor ring,
+# "pos": stream position in radix steps, "code": registry code name,
+# "consumed": consumed stages}.  Arrays go through ``save`` (npz +
+# manifest-last), scalars/strings ride the manifest's extra — a torn
+# session checkpoint is skipped by ``latest_step`` exactly like a torn
+# training checkpoint.
+
+def save_sessions(
+    ckpt_dir, step: int, sessions: Dict[str, dict],
+    extra: Optional[dict] = None,
+) -> pathlib.Path:
+    """Write the engine's session table as checkpoint ``step``."""
+    tree = {
+        sid: {"lam": np.asarray(s["lam"]), "hist": np.asarray(s["hist"])}
+        for sid, s in sessions.items()
+    }
+    meta = {
+        sid: {
+            "pos": int(s["pos"]),
+            "code": str(s["code"]),
+            "consumed": int(s.get("consumed", 0)),
+        }
+        for sid, s in sessions.items()
+    }
+    return save(ckpt_dir, step, tree,
+                extra={"sessions": meta, **(extra or {})})
+
+
+def load_sessions(
+    ckpt_dir, step: Optional[int] = None,
+) -> Tuple[Optional[int], Dict[str, dict], dict]:
+    """Load the latest COMPLETE session checkpoint (or ``step``).
+
+    Returns ``(step, sessions, extra)`` with sessions in ``save_sessions``
+    record form; ``(None, {}, {})`` when no complete checkpoint exists —
+    torn checkpoints (arrays without a manifest) are skipped by
+    ``latest_step``."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, {}, {}
+    out = pathlib.Path(ckpt_dir) / f"step_{step:09d}"
+    manifest = json.loads((out / "manifest.json").read_text())
+    data = np.load(out / "arrays.npz")
+    extra = dict(manifest.get("extra", {}))
+    meta = extra.pop("sessions", {})
+    sessions = {}
+    for sid, m in meta.items():
+        sessions[sid] = {
+            "lam": data[f"['{sid}']['lam']"],
+            "hist": data[f"['{sid}']['hist']"],
+            "pos": int(m["pos"]),
+            "code": str(m["code"]),
+            "consumed": int(m["consumed"]),
+        }
+    return step, sessions, extra

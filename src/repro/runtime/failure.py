@@ -21,13 +21,30 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence
 
-__all__ = ["HeartbeatMonitor", "ElasticPlanner", "MeshPlan", "StragglerMonitor"]
+__all__ = [
+    "HeartbeatMonitor",
+    "ElasticPlanner",
+    "MeshPlan",
+    "StragglerMonitor",
+    "RetryPolicy",
+]
 
 
 class HeartbeatMonitor:
-    def __init__(self, hosts: Sequence[int], timeout: float = 30.0):
+    """Declares hosts silent for > ``timeout`` failed.
+
+    ``now`` is the construction-time clock reading: every host starts
+    with ``last_seen = now`` (a host is given one full timeout window to
+    post its first beat).  The pre-§13 default of 0.0 was a cold-start
+    bug — on a wall clock, every host was ``timeout`` seconds "silent"
+    at construction and declared failed before it could ever beat.
+    """
+
+    def __init__(
+        self, hosts: Sequence[int], timeout: float = 30.0, now: float = 0.0
+    ):
         self.timeout = timeout
-        self.last_seen: Dict[int, float] = {h: 0.0 for h in hosts}
+        self.last_seen: Dict[int, float] = {h: float(now) for h in hosts}
 
     def beat(self, host: int, now: float):
         self.last_seen[host] = now
@@ -87,6 +104,26 @@ class ElasticPlanner:
                 dropped=tuple(alive[data * m :]),
             )
         return None
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff for dispatch retries (DESIGN.md §13).
+
+    ``max_retries`` bounds attempts PER LADDER RUNG (each degradation
+    step gets a fresh budget); ``backoff(i)`` is the delay before retry
+    ``i`` (0-indexed), capped at ``backoff_cap``.  The serving engine
+    runs on a virtual clock, so backoff is ACCOUNTED (the
+    ``engine_backoff_seconds_total`` counter) rather than slept —
+    wall-clock deployments can sleep the same numbers.
+    """
+
+    max_retries: int = 3
+    backoff_base: float = 0.05
+    backoff_cap: float = 2.0
+
+    def backoff(self, attempt: int) -> float:
+        return min(self.backoff_cap, self.backoff_base * (2.0 ** attempt))
 
 
 class StragglerMonitor:

@@ -51,10 +51,28 @@ RAGGED requests, mixed codes, mixed latency/throughput SLOs.  The
     ``evicted_tail`` — so an evicted session's total output equals
     uninterrupted ``decode_stream_chunked`` on what it consumed.
 
+  * **fault tolerance** (DESIGN.md §13) — every dispatch runs under a
+    guard: injected or real faults (device failures, timeouts,
+    stragglers past ``dispatch_timeout``, transient compile errors) are
+    retried with bounded exponential backoff, then degraded down a
+    per-path ladder (sharded -> batch, stream -> XLA chunked -> batch,
+    time-parallel -> batch) whose every rung decodes identical bits;
+    device failures shrink the mesh onto survivors
+    (``distributed.decoder.replan_mesh``, fed by an optional
+    ``HeartbeatMonitor``); requests that exhaust the ladder get a TYPED
+    error on their ticket — the engine itself never crashes — and
+    deadline-stamped requests are shed, not decoded late.  Session
+    durability: ``checkpoint_dir`` periodically checkpoints the session
+    table (``runtime.checkpoint.save_sessions``, manifest-last), and
+    ``restore_sessions`` rebuilds it bit-identically after a crash;
+    clients replay the bounded post-checkpoint window.
+
 ``launch/serve.py --service engine`` drives a synthetic multi-tenant
-mix through this engine; ``benchmarks/bench_engine.py`` sweeps offered
-load into ``BENCH_engine.json`` (p50/p99 per SLO class, batch occupancy,
-padding waste — schema in docs/BENCHMARKS.md).
+mix through this engine (``--chaos``/``--checkpoint-dir`` exercise the
+§13 machinery); ``benchmarks/bench_engine.py`` sweeps offered load into
+``BENCH_engine.json`` (p50/p99 per SLO class, batch occupancy, padding
+waste — schema in docs/BENCHMARKS.md) and ``benchmarks/bench_chaos.py``
+replays a kill schedule into ``BENCH_chaos.json``.
 """
 from __future__ import annotations
 
@@ -76,10 +94,13 @@ from repro.core.kernel_geometry import (
 )
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NullRecorder, SpanRecorder
+from repro.runtime.chaos import DeviceFailure, DispatchTimeout
+from repro.runtime.failure import RetryPolicy
 
 __all__ = [
     "SLO_CLASSES",
     "DEFAULT_MAX_WAIT",
+    "DEGRADATION_LADDER",
     "DecodeRequest",
     "Ticket",
     "DecodeEngine",
@@ -96,6 +117,23 @@ DEFAULT_MAX_WAIT = {"latency": 0.001, "throughput": 0.010}
 # §8 one-pass streaming path when the engine's decoder is
 # kernel-enabled; shorter frames stay on the dense two-pass batch
 STREAM_MIN_STEPS = 4096
+
+# the §13 degradation ladder: when a dispatch path keeps faulting past
+# its retry budget, the cell falls to the next rung.  Every rung decodes
+# bit-identical output (the §10 routing-equivalence contract), so
+# degradation trades only throughput/latency, never correctness.
+# "stream_xla" is the §8 one-pass kernel forced back onto the two-pass
+# XLA chunked path (bit-exact by the kernel-parity gate); "batch" is the
+# single-device dense decode every code supports.  WAVA, batch and
+# session dispatches have no alternative implementation — they retry in
+# place and then surface a typed per-ticket error.
+DEGRADATION_LADDER = {
+    "sharded": ("sharded", "batch"),
+    "stream": ("stream", "stream_xla", "batch"),
+    "time_parallel": ("time_parallel", "batch"),
+    "wava": ("wava",),
+    "batch": ("batch",),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +157,11 @@ class DecodeRequest:
     code: str = "ccsds-k7"
     slo: str = "throughput"
     flushed: bool = False
+    # §13 deadline-aware shedding: a request whose engine clock passes
+    # ``deadline`` before its cell dispatches is rejected with a typed
+    # ``deadline_exceeded`` error instead of being decoded late (None =
+    # never expires)
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -127,6 +170,11 @@ class Ticket:
 
     ``bits`` is filled (np.int32, message bits) when the batch the
     request rode in decodes; ``dropped`` marks backpressure rejects.
+    ``error`` is the §13 typed failure result (``deadline_exceeded``,
+    or ``decode_failed:<ExceptionType>`` after the retry budget and the
+    degradation ladder are both exhausted) — a ticket always ends done
+    with bits, done with an error, or dropped; never silently lost.
+    ``retries`` counts the dispatch retries its batch absorbed.
     """
 
     id: int
@@ -140,6 +188,9 @@ class Ticket:
     completed: Optional[float] = None
     cell: Optional[Tuple] = None
     path: Optional[str] = None
+    error: Optional[str] = None
+    retries: int = 0
+    deadline: Optional[float] = None
 
     @property
     def sojourn(self) -> Optional[float]:
@@ -194,6 +245,24 @@ class DecodeEngine:
                        spans (enqueue -> assemble -> jit lookup ->
                        dispatch -> device wait -> emit).  None installs
                        the zero-cost ``NullRecorder``.
+    chaos            : optional ``runtime.chaos.ChaosInjector`` — called
+                       before every dispatch; injects the §13 fault
+                       schedule (tests/CI/benches; None in production).
+    retry            : ``runtime.failure.RetryPolicy`` (or an int
+                       max-retries shorthand) bounding per-rung dispatch
+                       retries; None = the default policy.
+    dispatch_timeout : straggler promotion threshold, seconds — injected
+                       slow-host delays at/above it count as timeouts.
+    monitor          : optional ``runtime.failure.HeartbeatMonitor``;
+                       every poll, hosts it declares failed are removed
+                       from the mesh (host ids map 1:1 onto device ids).
+    checkpoint_dir   : session-durability directory (DESIGN.md §13);
+                       ``checkpoint_sessions``/``restore_sessions`` and
+                       the periodic ``checkpoint_interval`` writer use
+                       it.  None disables session checkpointing.
+    checkpoint_interval : engine-clock seconds between automatic
+                       session-table checkpoints during poll (None =
+                       only explicit ``checkpoint_sessions`` calls).
     """
 
     def __init__(
@@ -210,6 +279,12 @@ class DecodeEngine:
         min_cell: int = ENGINE_MIN_CELL,
         registry: Optional[MetricsRegistry] = None,
         recorder: Optional[SpanRecorder] = None,
+        chaos=None,
+        retry=None,
+        dispatch_timeout: Optional[float] = None,
+        monitor=None,
+        checkpoint_dir=None,
+        checkpoint_interval: Optional[float] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -223,7 +298,19 @@ class DecodeEngine:
         self.mesh = mesh
         self.underfill_rows = underfill_rows
         self.min_cell = min_cell
+        self.chaos = chaos
+        if isinstance(retry, int):
+            retry = RetryPolicy(max_retries=retry)
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.dispatch_timeout = dispatch_timeout
+        self.monitor = monitor
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_interval = checkpoint_interval
+        self._last_ckpt: Optional[float] = None
+        self._ckpt_steps = itertools.count()
+        self._failed_devices: set = set()
         self._decoders: Dict[str, ViterbiDecoder] = {}
+        self._xla_decoders: Dict[str, ViterbiDecoder] = {}
         self._queues: Dict[Tuple, collections.deque] = {}
         self._fns: Dict[Tuple, object] = {}
         self._sessions: "collections.OrderedDict[str, _Session]" = (
@@ -291,6 +378,32 @@ class DecodeEngine:
             "dispatch + device wait wall time per (code, path, f, t) "
             "cell (recorded only while tracing is enabled)",
         )
+        # §13 fault-tolerance accounting
+        self._m_faults = r.counter(
+            "engine_faults_total",
+            "dispatch faults observed, by kind (device_failure/timeout/"
+            "slow/compile_error/error) and path",
+        )
+        self._m_retries = r.counter(
+            "engine_retries_total",
+            "dispatch retries by path (bounded per ladder rung)",
+        )
+        self._m_backoff = r.counter(
+            "engine_backoff_seconds_total",
+            "exponential-backoff budget accounted before retries "
+            "(virtual: recorded, not slept, on the engine clock)",
+        )
+        self._m_degraded = r.counter(
+            "engine_degraded_total",
+            "degradation-ladder reroutes, labeled from -> to",
+        )
+        self._m_failover = r.counter(
+            "engine_failover_total",
+            "device failures absorbed by mesh re-planning",
+        )
+        self._m_ckpt = r.counter(
+            "engine_checkpoints_total", "session-table checkpoints written"
+        )
 
     # -- decoders / jit-fn cache ------------------------------------------
 
@@ -310,6 +423,25 @@ class DecodeEngine:
                 **kw,
             )
         return self._decoders[code]
+
+    def _xla_decoder(self, code: str) -> ViterbiDecoder:
+        """Non-kernel twin of ``_decoder(code)`` backing the §13
+        degraded "stream_xla" rung: identical code tables and decision
+        depth, Pallas backend off — the two-pass XLA chunked path is
+        bit-exact to the one-pass kernel (the kernel-parity gate), so
+        falling here after kernel compile faults changes nothing but
+        speed."""
+        if code not in self._xla_decoders:
+            kw = {}
+            if self.decision_depth is not None:
+                kw["decision_depth"] = self.decision_depth
+            self._xla_decoders[code] = ViterbiDecoder.from_standard(
+                code,
+                precision=self.precision,
+                use_kernel=False,
+                **kw,
+            )
+        return self._xla_decoders[code]
 
     def _underfill(self) -> int:
         if self.underfill_rows is not None:
@@ -373,6 +505,11 @@ class DecodeEngine:
             )
         elif path == "stream":
             fn = lambda llrs: dec.decode_stream_chunked(  # noqa: E731
+                llrs, initial_state=0, final_state=fin
+            )
+        elif path == "stream_xla":
+            xdec = self._xla_decoder(code)
+            fn = lambda llrs: xdec.decode_stream_chunked(  # noqa: E731
                 llrs, initial_state=0, final_state=fin
             )
         elif path == "sharded":
@@ -455,7 +592,15 @@ class DecodeEngine:
             slo=req.slo,
             submitted=now,
             n_out=n_stages,
+            deadline=req.deadline,
         )
+        if req.deadline is not None and now > req.deadline:
+            # §13 deadline shedding at the door: already expired
+            ticket.done = True
+            ticket.error = "deadline_exceeded"
+            ticket.completed = now
+            self._m_requests.inc(1, event="expired", slo=req.slo)
+            return ticket
         if self.queue_depth() >= self.max_pending:
             ticket.dropped = True
             self._m_requests.inc(1, event="rejected", slo=req.slo)
@@ -491,6 +636,7 @@ class DecodeEngine:
         completed out of band by close_session/eviction since the last
         poll)."""
         now = time.monotonic() if now is None else now
+        self._check_hosts(now)
         done, self._done_buffer = self._done_buffer, []
         for key in sorted(self._queues):
             q = self._queues[key]
@@ -500,6 +646,7 @@ class DecodeEngine:
             ):
                 done.extend(self._run_batch(key, q, now))
         done.extend(self._run_sessions(now))
+        self._maybe_checkpoint(now)
         return done
 
     def drain(self, now: Optional[float] = None) -> List[Ticket]:
@@ -507,12 +654,14 @@ class DecodeEngine:
         cells included — and all pending session chunks.  Sessions stay
         open (close them via ``close_session``)."""
         now = time.monotonic() if now is None else now
+        self._check_hosts(now)
         done, self._done_buffer = self._done_buffer, []
         for key in sorted(self._queues):
             q = self._queues[key]
             while q:
                 done.extend(self._run_batch(key, q, now))
         done.extend(self._run_sessions(now))
+        self._maybe_checkpoint(now)
         return done
 
     def _run_batch(self, key, q, now: float) -> List[Ticket]:
@@ -523,7 +672,23 @@ class DecodeEngine:
             now=now,
         ) as bsp:
             k = min(len(q), self.max_batch)
-            entries = [q.popleft() for _ in range(k)]
+            entries, shed = [], []
+            for _ in range(k):
+                ticket, llrs = q.popleft()
+                if ticket.deadline is not None and now > ticket.deadline:
+                    # §13 deadline shedding: expired while queued —
+                    # typed error, never decoded late
+                    ticket.done = True
+                    ticket.error = "deadline_exceeded"
+                    ticket.completed = now
+                    self._m_requests.inc(1, event="expired", slo=slo)
+                    shed.append(ticket)
+                else:
+                    entries.append((ticket, llrs))
+            if not entries:
+                bsp.set(n_real=0, shed=len(shed))
+                return shed
+            k = len(entries)
             f_cell = pick_cell_frames(k, self.max_batch)
             dec = self._decoder(code_name)
             serial = dec.puncture is not None
@@ -556,7 +721,16 @@ class DecodeEngine:
 
                     prof = dispatch_profile(dec, path, f_cell, n_stages)
                     dsp.set(**prof.span_attrs())
-                out = fn(jnp.asarray(dense))
+                try:
+                    path, out, retries = self._dispatch_with_faults(
+                        code_name, fn, path, f_cell, l_cell,
+                        kind == "flushed", jnp.asarray(dense), now, dsp,
+                    )
+                except Exception as e:  # noqa: BLE001 — §13: ladder
+                    # exhausted; riders get typed errors, engine lives
+                    return shed + self._fail_tickets(
+                        [t for t, _ in entries], e, slo, now
+                    )
                 with rec.span("engine.device_wait"):
                     bits = np.asarray(out)
                 if prof is not None:
@@ -572,6 +746,7 @@ class DecodeEngine:
                     ticket.completed = now
                     ticket.cell = (code_name, slo, l_cell, f_cell)
                     ticket.path = path
+                    ticket.retries = retries
                     self._m_sojourn.observe(now - ticket.submitted, slo=slo)
         cl = dict(code=code_name, path=path, f=f_cell, t=l_cell)
         self._m_requests.inc(k, event="completed", slo=slo)
@@ -591,7 +766,142 @@ class DecodeEngine:
                 wait=now - entries[0][0].submitted,
             )
         )
-        return [t for t, _ in entries]
+        return shed + [t for t, _ in entries]
+
+    # -- fault handling (DESIGN.md §13) -----------------------------------
+
+    def _inject(self, code: str, path: str):
+        """Chaos hook: called immediately before every dispatch attempt
+        (retries and degraded re-dispatches included).  Raises the
+        injected typed fault, or promotes an injected straggler delay
+        at/above ``dispatch_timeout`` into a ``DispatchTimeout``;
+        shorter delays are absorbed (counted, not raised)."""
+        if self.chaos is None:
+            return
+        delay = self.chaos.on_dispatch(code, path)
+        if delay:
+            self._m_faults.inc(1, kind="slow", path=path)
+            if (
+                self.dispatch_timeout is not None
+                and delay >= self.dispatch_timeout
+            ):
+                raise DispatchTimeout(
+                    f"straggler delay {delay:.3f}s >= dispatch_timeout "
+                    f"{self.dispatch_timeout:.3f}s"
+                )
+
+    def _dispatch_with_faults(
+        self, code: str, fn, path: str, f_cell: int, l_cell: int,
+        flushed: bool, arr, now: float, dsp,
+    ):
+        """Run one assembled cell through the §13 retry + degradation
+        machinery; returns ``(final_path, out, retries)`` or re-raises
+        once every rung of the ladder has exhausted its retry budget.
+
+        Correctness under retry/degradation is free: decode is pure
+        (the cell's LLRs are immutable and no engine state was updated
+        yet), and every ladder rung is bit-identical by the §10 routing
+        contract — so a retried or degraded dispatch emits exactly the
+        bits the first attempt would have."""
+        ladder = DEGRADATION_LADDER.get(path, (path,))
+        rung, attempt, retries = 0, 0, 0
+        while True:
+            try:
+                self._inject(code, path)
+                return path, fn(arr), retries
+            except Exception as e:  # noqa: BLE001 — classify below
+                kind = getattr(e, "kind", "error")
+                if kind != "slow":  # slow already counted by _inject
+                    self._m_faults.inc(1, kind=kind, path=path)
+                self.recorder.event(
+                    "engine.fault", kind=kind, path=path, error=str(e),
+                    now=now,
+                )
+                if dsp is not None:
+                    dsp.set(fault=kind)
+                degrade_now = False
+                if isinstance(e, DeviceFailure):
+                    alive = self._handle_device_failure(e.device, now)
+                    if path == "sharded":
+                        from repro.distributed.decoder import (
+                            engine_dispatch_ready,
+                        )
+
+                        # retry on the survivor mesh only if the cell
+                        # still fills it; otherwise fall to batch
+                        degrade_now = not (
+                            alive
+                            and engine_dispatch_ready(f_cell, self.mesh)
+                        )
+                if not degrade_now and attempt < self.retry.max_retries:
+                    self._m_retries.inc(1, path=path)
+                    self._m_backoff.inc(
+                        self.retry.backoff(attempt), path=path
+                    )
+                    attempt += 1
+                    retries += 1
+                    continue
+                if rung + 1 < len(ladder):
+                    nxt = ladder[rung + 1]
+                    self._m_degraded.inc(1, **{"from": path, "to": nxt})
+                    self.recorder.event(
+                        "engine.degrade", now=now,
+                        **{"from": path, "to": nxt},
+                    )
+                    rung += 1
+                    attempt = 0
+                    path = nxt
+                    fn = self._decode_fn(
+                        code, path, f_cell, l_cell, flushed=flushed
+                    )
+                    continue
+                e.engine_retries = retries  # rides to _fail_tickets
+                raise
+
+    def _fail_tickets(self, tickets, exc, slo: str, now: float):
+        """Retry budget + ladder exhausted: every rider gets a TYPED
+        error result (never a silent drop); the engine keeps serving."""
+        err = f"decode_failed:{type(exc).__name__}"
+        for t in tickets:
+            t.done = True
+            t.error = err
+            t.retries = getattr(exc, "engine_retries", 0)
+            t.completed = now
+        self._m_requests.inc(len(tickets), event="failed", slo=slo)
+        self.recorder.event(
+            "engine.batch_failed", n=len(tickets), error=repr(exc), now=now
+        )
+        return tickets
+
+    def _handle_device_failure(self, device, now: float) -> bool:
+        """Remove a failed device and re-plan the mesh onto survivors
+        (``distributed.decoder.replan_mesh`` — the ElasticPlanner
+        largest-power-of-two rule).  Returns True when a non-empty mesh
+        survives.  Cached sharded decode fns late-bind ``self.mesh``,
+        so they dispatch onto the shrunken mesh without invalidation."""
+        if device is not None:
+            self._failed_devices.add(int(device))
+        self._m_failover.inc(1)
+        n_dev = 0
+        if self.mesh is not None:
+            from repro.distributed.decoder import replan_mesh
+
+            self.mesh = replan_mesh(self.mesh, self._failed_devices)
+            n_dev = 0 if self.mesh is None else int(self.mesh.devices.size)
+        self.recorder.event(
+            "engine.failover", device=device, devices=n_dev, now=now
+        )
+        return self.mesh is not None
+
+    def _check_hosts(self, now: float):
+        """HeartbeatMonitor integration: hosts silent past the monitor
+        timeout map 1:1 onto mesh device ids and are failed over exactly
+        like an in-dispatch ``DeviceFailure``."""
+        if self.monitor is None:
+            return
+        for h in self.monitor.failed(now):
+            if h not in self._failed_devices:
+                self._handle_device_failure(h, now)
 
     # -- sessions (stateful chunked streaming, DESIGN.md §10) -------------
 
@@ -686,28 +996,48 @@ class DecodeEngine:
         ``decode_chunk_multi`` dispatches of at most ``max_batch``
         sessions each — sessions at different stream positions batch
         together (the per-state emission slice keeps each
-        bit-identical to a solo drive)."""
+        bit-identical to a solo drive).
+
+        A group whose dispatch fails PERMANENTLY (retry budget spent)
+        has its head chunks requeued and its sessions stalled for the
+        rest of this poll — the chunks retry at the next poll, so a
+        session never loses a chunk to a fault (§13: sessions have no
+        degraded rung; deferral is the fallback)."""
         done: List[Ticket] = []
+        stalled: set = set()
         while True:
             groups: Dict[Tuple, List[_Session]] = {}
             for sid in sorted(self._sessions):
                 sess = self._sessions[sid]
-                if sess.pending:
+                if sess.pending and sid not in stalled:
                     key = (sess.code, sess.pending[0][1].shape[1])
                     groups.setdefault(key, []).append(sess)
             if not groups:
                 return done
             for (code_name, c), sessions in sorted(groups.items()):
                 for lo in range(0, len(sessions), self.max_batch):
-                    done.extend(self._dispatch_session_group(
-                        code_name, c,
-                        sessions[lo: lo + self.max_batch], now,
-                    ))
+                    batch = sessions[lo: lo + self.max_batch]
+                    out, ok = self._dispatch_session_group(
+                        code_name, c, batch, now,
+                    )
+                    done.extend(out)
+                    if not ok:
+                        stalled.update(s.sid for s in batch)
 
     def _dispatch_session_group(
-        self, code_name: str, c: int, sessions: List[_Session], now: float
-    ) -> List[Ticket]:
-        """One fused dispatch of <= max_batch sessions' head chunks."""
+        self, code_name: str, c: int, sessions: List[_Session], now: float,
+        abandon_on_failure: bool = False,
+    ) -> Tuple[List[Ticket], bool]:
+        """One fused dispatch of <= max_batch sessions' head chunks.
+
+        Returns ``(completed tickets, ok)``.  Dispatch faults retry
+        under the §13 budget; ``decode_chunk_multi`` is functional
+        (session states are reassigned only AFTER a successful decode),
+        so a retry re-runs on untouched carries and stays bit-exact.  On
+        permanent failure ``ok`` is False and the popped head chunks are
+        requeued at their sessions' heads (deferred to the next poll) —
+        unless ``abandon_on_failure`` (the close/eviction path, which
+        cannot defer): then each chunk's ticket gets a typed error."""
         dec = self._decoder(code_name)
         rec = self.recorder
         with rec.span(
@@ -746,7 +1076,38 @@ class DecodeEngine:
 
                     prof = dispatch_profile(dec, "session", f_cell, c)
                     dsp.set(**prof.span_attrs())
-                new_states, outs = self._fns[key](states, chunks)
+                attempt = retries = 0
+                while True:
+                    try:
+                        self._inject(code_name, "session")
+                        new_states, outs = self._fns[key](states, chunks)
+                        break
+                    except Exception as e:  # noqa: BLE001 — §13 guard
+                        kind = getattr(e, "kind", "error")
+                        if kind != "slow":
+                            self._m_faults.inc(1, kind=kind, path="session")
+                        self.recorder.event(
+                            "engine.fault", kind=kind, path="session",
+                            error=str(e), now=now,
+                        )
+                        dsp.set(fault=kind)
+                        if isinstance(e, DeviceFailure):
+                            self._handle_device_failure(e.device, now)
+                        if attempt < self.retry.max_retries:
+                            self._m_retries.inc(1, path="session")
+                            self._m_backoff.inc(
+                                self.retry.backoff(attempt), path="session"
+                            )
+                            attempt += 1
+                            retries += 1
+                            continue
+                        # permanent: states untouched (functional
+                        # dispatch) — defer or abandon, never corrupt
+                        e.engine_retries = retries
+                        return self._session_dispatch_failed(
+                            sessions, tickets, chunks, e, now,
+                            abandon_on_failure,
+                        ), False
                 with rec.span("engine.device_wait"):
                     outs = [np.asarray(o) for o in outs]
                 if prof is not None:
@@ -767,6 +1128,7 @@ class DecodeEngine:
                     ticket.done = True
                     ticket.completed = now
                     ticket.path = "session"
+                    ticket.retries = retries
                     done.append(ticket)
                     self._m_sojourn.observe(
                         now - ticket.submitted, slo="throughput"
@@ -788,7 +1150,26 @@ class DecodeEngine:
                 wait=0.0,
             )
         )
-        return done
+        return done, True
+
+    def _session_dispatch_failed(
+        self, sessions, tickets, chunks, exc, now: float,
+        abandon: bool,
+    ) -> List[Ticket]:
+        """Permanent session-group dispatch failure (§13).  Requeue the
+        popped head chunks (default — they retry next poll, the session
+        loses nothing) or, on the close/eviction path, abandon them
+        with typed per-ticket errors (``chunks`` may carry a trailing
+        padding entry; ``tickets`` is the real count)."""
+        if abandon:
+            return self._fail_tickets(tickets, exc, "throughput", now)
+        for sess, ticket, shaped in zip(sessions, tickets, chunks):
+            sess.pending.appendleft((ticket, shaped))
+        self.recorder.event(
+            "engine.session_deferred", n=len(tickets), error=repr(exc),
+            now=now,
+        )
+        return []
 
     def close_session(
         self, sid: str, now: Optional[float] = None
@@ -803,9 +1184,11 @@ class DecodeEngine:
         now = time.monotonic() if now is None else now
         sess = self._sessions[sid]
         while sess.pending:  # decode in order, this session only
-            self._done_buffer.extend(self._dispatch_session_group(
-                sess.code, sess.pending[0][1].shape[1], [sess], now
-            ))
+            out, _ok = self._dispatch_session_group(
+                sess.code, sess.pending[0][1].shape[1], [sess], now,
+                abandon_on_failure=True,  # a close cannot defer (§13)
+            )
+            self._done_buffer.extend(out)
         dec = self._decoder(sess.code)
         tail = np.asarray(dec.flush_stream(sess.state))[0].astype(np.int32)
         del self._sessions[sid]
@@ -830,6 +1213,102 @@ class DecodeEngine:
         """Tail bits of an evicted session (kept until read once)."""
         return self._evicted.pop(sid)
 
+    # -- session durability (DESIGN.md §13) -------------------------------
+
+    def checkpoint_sessions(self, now: Optional[float] = None):
+        """Write the whole session table to ``checkpoint_dir`` via
+        ``runtime.checkpoint.save_sessions`` (arrays in npz, scalars in
+        the manifest, manifest written LAST — a crash mid-write leaves a
+        torn step that restore skips).  The FULL ``StreamState`` is
+        persisted (path metrics, survivor ring, stream position), so a
+        restore resumes the exact carry — recovery is bit-identical by
+        construction, no warmup re-decode needed; clients only replay
+        chunks submitted after the checkpoint (a window bounded by
+        ``checkpoint_interval``).  Returns the step path, or None when
+        checkpointing is disabled."""
+        if self.checkpoint_dir is None:
+            return None
+        now = time.monotonic() if now is None else now
+        from repro.runtime import checkpoint as ckpt
+
+        records = {
+            sid: {
+                "lam": np.asarray(s.state.lam),
+                "hist": np.asarray(s.state.hist),
+                "pos": int(s.state.pos),
+                "code": s.code,
+                "consumed": int(s.consumed_steps),
+            }
+            for sid, s in self._sessions.items()
+        }
+        step = next(self._ckpt_steps)
+        path = ckpt.save_sessions(
+            self.checkpoint_dir, step, records, extra={"now": now}
+        )
+        self._last_ckpt = now
+        self._m_ckpt.inc(1)
+        self.recorder.event(
+            "engine.checkpoint", step=step, sessions=len(records), now=now
+        )
+        return path
+
+    def _maybe_checkpoint(self, now: float):
+        """Periodic session-table checkpoint on the engine clock."""
+        if self.checkpoint_dir is None or self.checkpoint_interval is None:
+            return
+        if (
+            self._last_ckpt is None
+            or now - self._last_ckpt >= self.checkpoint_interval
+        ):
+            self.checkpoint_sessions(now)
+
+    def restore_sessions(
+        self, ckpt_dir=None, now: Optional[float] = None
+    ) -> Dict[str, int]:
+        """Failover entry point: rebuild the session table from the
+        latest COMPLETE checkpoint in ``ckpt_dir`` (default: this
+        engine's ``checkpoint_dir``).  Returns ``{sid: consumed
+        stages}`` — the stream position each client replays its feed
+        from.  The restored carry equals the checkpointed carry exactly
+        (full ``StreamState``), and chunk decode is deterministic, so
+        replayed chunks re-emit byte-for-byte the bits the lost engine
+        emitted after the checkpoint: delivery is idempotent and the
+        total recovered output is bit-identical to uninterrupted
+        ``decode_stream_chunked`` (asserted in tests/test_chaos.py and
+        the chaos-smoke CI gate)."""
+        from repro.core.decoder import StreamState
+        from repro.runtime import checkpoint as ckpt
+
+        now = time.monotonic() if now is None else now
+        step, records, _extra = ckpt.load_sessions(
+            ckpt_dir if ckpt_dir is not None else self.checkpoint_dir
+        )
+        resume: Dict[str, int] = {}
+        for sid, recd in records.items():
+            if sid in self._sessions:
+                raise ValueError(f"session {sid!r} already open")
+            self._decoder(recd["code"])  # validates the code name
+            self._sessions[sid] = _Session(
+                sid=sid,
+                code=recd["code"],
+                state=StreamState(
+                    lam=jnp.asarray(recd["lam"]),
+                    hist=jnp.asarray(recd["hist"]),
+                    pos=int(recd["pos"]),
+                ),
+                pending=collections.deque(),
+                last_used=now,
+                consumed_steps=int(recd["consumed"]),
+            )
+            self._m_sessions.inc(1, event="restored")
+            resume[sid] = int(recd["consumed"])
+        self._m_open_sessions.set(len(self._sessions))
+        if records:
+            self.recorder.event(
+                "engine.restore", step=step, sessions=len(records), now=now
+            )
+        return resume
+
     # -- convenience / stats ----------------------------------------------
 
     def decode(
@@ -841,6 +1320,9 @@ class DecodeEngine:
         self.drain(now=now)
         if any(t.dropped for t in tickets):
             raise RuntimeError("backpressure drop inside decode()")
+        errs = sorted({t.error for t in tickets if t.error})
+        if errs:
+            raise RuntimeError(f"typed errors inside decode(): {errs}")
         return [t.bits for t in tickets]
 
     def stats(self) -> dict:
@@ -867,6 +1349,10 @@ class DecodeEngine:
         for lbl, v in self._m_batches.series():
             p = lbl.get("path", "?")
             paths[p] = paths.get(p, 0) + int(v)
+        faults: Dict[str, int] = {}
+        for lbl, v in self._m_faults.series():
+            kd = lbl.get("kind", "?")
+            faults[kd] = faults.get(kd, 0) + int(v)
         qd = self.queue_depth()
         self._m_queue.set(qd)
         self._m_open_sessions.set(len(self._sessions))
@@ -893,4 +1379,12 @@ class DecodeEngine:
                 "entries": len(self._fns),
             },
             "latency": lat,
+            # §13 fault-tolerance block (all zero on a healthy run)
+            "faults": faults,
+            "retries": int(self._m_retries.total()),
+            "degraded": int(self._m_degraded.total()),
+            "failovers": int(self._m_failover.total()),
+            "expired": int(self._m_requests.total(event="expired")),
+            "failed": int(self._m_requests.total(event="failed")),
+            "checkpoints": int(self._m_ckpt.total()),
         }
