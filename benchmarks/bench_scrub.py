@@ -1,0 +1,153 @@
+"""SDC-scrubber cost + efficacy bench (DESIGN.md §14).
+
+    PYTHONPATH=src python -m benchmarks.bench_scrub
+    PYTHONPATH=src python -m benchmarks.run --only scrub
+
+Two questions, one artifact (``BENCH_scrub.json``):
+
+1. **What does scrubbing cost?**  The bench_engine mixed-tenant
+   workload replays at the saturating offered load with the scrubber
+   off (baseline), at the production rate 0.1, and at rate 1.0 (the
+   stress bound).  ``scrub/overhead@rate=..`` rows carry the replay's
+   batch occupancy with ``occ_ratio`` = scrubbed / baseline occupancy
+   (the ISSUE acceptance gate reads occ_ratio >= 0.9 at rate 0.1 —
+   scrubbing samples dispatch OUTPUT, so batch assembly must be
+   untouched) plus ``wall_ratio``, the end-to-end wall-clock ratio
+   (syndrome checks + shadow re-decodes are the only added work).
+
+2. **Does it catch anything?**  ``scrub/detection`` replays real-AWGN
+   batch traffic under a seeded ``bit_flip`` schedule at scrub rate
+   1.0: ``detected=K/N`` counts corrupted frames caught (typed
+   ``sdc_detected``) out of frames corrupted, with false alarms and
+   quarantined devices alongside.
+
+``scrub/syndrome_us`` microbenches one re-encode syndrome check (the
+per-frame stage-1 cost the sampling rate multiplies).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.bench_engine import MAX_WAIT, TICK, _workload
+
+
+def _replay(requests, load, max_batch, scrub, chaos=None):
+    """bench_engine's virtual-clock replay with a scrub rate; returns
+    (engine, tickets, wall_seconds)."""
+    from repro.serve.engine import DecodeEngine
+
+    engine = DecodeEngine(
+        max_batch=max_batch, max_wait=dict(MAX_WAIT), scrub=scrub,
+        chaos=chaos,
+    )
+    rate = load * max_batch / MAX_WAIT["throughput"]
+    arrivals = [i / rate for i in range(len(requests))]
+    tickets = []
+    t0 = time.perf_counter()
+    now, i = 0.0, 0
+    while i < len(requests) or engine.queue_depth():
+        while i < len(requests) and arrivals[i] <= now:
+            tickets.append(engine.submit(requests[i][0], now=now))
+            i += 1
+        engine.poll(now=now)
+        now += TICK
+    engine.drain(now=now)
+    return engine, tickets, time.perf_counter() - t0
+
+
+def bench(n_requests: int = 240, base_len: int = 256, max_batch: int = 16,
+          n_frames: int = 16, ebn0_db: float = 6.5):
+    """Returns (name, us_per_call, derived) rows for run.py."""
+    import jax
+
+    from repro.codes.registry import get_code
+    from repro.codes.simulate import sim_frame_batch
+    from repro.runtime.chaos import ChaosInjector, ChaosSchedule, FaultEvent
+    from repro.serve.engine import DecodeEngine, DecodeRequest
+    from repro.verify.scrub import syndrome_check
+
+    requests = _workload(n_requests, base_len)
+    load = 16.0  # the saturating point of the bench_engine sweep
+    rows = []
+
+    # -- overhead: baseline / rate 0.1 / rate 1.0 -------------------------
+    _replay(requests, load, max_batch, scrub=0.0)  # jit warmup
+    base_eng, _, base_wall = _replay(requests, load, max_batch, scrub=0.0)
+    base = base_eng.stats()
+    for rate in (0.1, 1.0):
+        eng, _, wall = _replay(requests, load, max_batch, scrub=rate)
+        s = eng.stats()
+        occ_ratio = (
+            s["occupancy"] / base["occupancy"] if base["occupancy"] else 0.0
+        )
+        rows.append((
+            f"scrub/overhead@rate={rate}",
+            wall / max(s["batches"], 1) * 1e6,
+            f"occupancy={s['occupancy']:.3f};occ_ratio={occ_ratio:.3f}"
+            f";baseline={base['occupancy']:.3f}"
+            f";wall_ratio={wall / base_wall:.3f}"
+            f";sampled={s['scrub']['sampled']}"
+            f";frames={s['scrub']['frames']}"
+            f";flags={s['scrub']['syndrome_flags']}",
+        ))
+
+    # -- detection: seeded bit_flip schedule on real AWGN traffic ---------
+    code = get_code("ccsds-k7")
+    _, llrs = sim_frame_batch(
+        jax.random.PRNGKey(3), code, n_frames, 120, ebn0_db
+    )
+    llrs = np.asarray(llrs)
+
+    def frames_run(chaos=None, scrub=1.0):
+        eng = DecodeEngine(max_batch=n_frames, scrub=scrub, chaos=chaos)
+        ts = [eng.submit(DecodeRequest(
+            llrs=llrs[i], code="ccsds-k7", flushed=True
+        ), now=0.0) for i in range(n_frames)]
+        eng.drain(now=0.0)
+        return eng, ts
+
+    _, ref_t = frames_run(scrub=0.0)
+    ref_bits = [t.bits.copy() for t in ref_t]
+    injector = ChaosInjector(ChaosSchedule([
+        FaultEvent(at=0, kind="bit_flip", device=0, flips=4),
+    ]))
+    t0 = time.perf_counter()
+    eng, ts = frames_run(chaos=injector)
+    det_wall = time.perf_counter() - t0
+    s = eng.stats()
+    detected = sum(t.error == "sdc_detected" for t in ts)
+    missed = sum(
+        t.error is None and not np.array_equal(t.bits, ref_bits[i])
+        for i, t in enumerate(ts)
+    )
+    rows.append((
+        f"scrub/detection@ebn0={ebn0_db}",
+        det_wall / n_frames * 1e6,
+        f"detected={detected}/{detected + missed}"
+        f";false_alarms={s['scrub']['false_alarms']}"
+        f";quarantined={len(s['quarantined'])}"
+        f";failovers={s['failovers']}"
+        f";flips={injector.injected['bit_flip'] * 4}",
+    ))
+
+    # -- stage-1 microbench: one syndrome check ---------------------------
+    bits_i = ref_bits[0]
+    reps = 50
+    syndrome_check(bits_i, llrs[0], code)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        syndrome_check(bits_i, llrs[0], code)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    rows.append((
+        "scrub/syndrome_us",
+        us,
+        f"n_stages={bits_i.shape[0]};per-frame-stage1-cost",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

@@ -30,6 +30,11 @@ the perf trajectory is tracked across PRs:
                        with session checkpoint/failover — occupancy
                        ratio vs the no-chaos baseline, retry/failover
                        totals, recovered-session bit-exactness count
+  * bench_scrub      — §14 SDC-scrubber cost + efficacy: engine replay
+                       occupancy/wall ratios vs the no-scrub baseline
+                       (the occ_ratio >= 0.9 @ rate 0.1 gate), seeded
+                       bit_flip detection counts, per-frame syndrome
+                       check cost
   * roofline_report  — §Roofline summary from the dry-run artifacts
 
 Artifact schemas (column meanings, units, regeneration commands) are
@@ -72,6 +77,12 @@ _FAULTS = re.compile(r"faults=([0-9]+)")
 _RETRIES = re.compile(r"retries=([0-9]+)")
 _FAILOVERS = re.compile(r"failovers=([0-9]+)")
 _RECOVERED = re.compile(r"recovered=([0-9]+)/([0-9]+)")
+# §14 scrub-suite columns: wall-clock ratio vs the no-scrub baseline,
+# corrupted-frames-detected counts, scrubber flag/false-alarm totals
+_WALL_RATIO = re.compile(r"wall_ratio=([0-9.]+)")
+_DETECTED = re.compile(r"detected=([0-9]+)/([0-9]+)")
+_FALSE_ALARMS = re.compile(r"false_alarms=([0-9]+)")
+_QUARANTINED = re.compile(r"quarantined=([0-9]+)")
 
 
 def _artifact_rows(rows):
@@ -158,6 +169,19 @@ def _artifact_rows(rows):
         if m:
             row["sessions_recovered"] = int(m.group(1))
             row["sessions_total"] = int(m.group(2))
+        m = _WALL_RATIO.search(row["derived"])
+        if m:
+            row["wall_ratio"] = float(m.group(1))
+        m = _DETECTED.search(row["derived"])
+        if m:
+            row["frames_detected"] = int(m.group(1))
+            row["frames_corrupted"] = int(m.group(2))
+        m = _FALSE_ALARMS.search(row["derived"])
+        if m:
+            row["false_alarms"] = int(m.group(1))
+        m = _QUARANTINED.search(row["derived"])
+        if m:
+            row["devices_quarantined"] = int(m.group(1))
         if ";upper" in row["derived"]:
             row["upper_bound"] = True
         out.append(row)
@@ -238,6 +262,7 @@ def main() -> None:
         bench_kernel,
         bench_latency,
         bench_radix,
+        bench_scrub,
         bench_throughput,
         roofline_report,
     )
@@ -288,6 +313,12 @@ def main() -> None:
             base_len=256,
             max_batch=16,
             n_chunks=3 if args.fast else 4,
+        ),
+        "scrub": lambda: bench_scrub.bench(
+            n_requests=120 if args.fast else 240,
+            base_len=256,
+            max_batch=16,
+            n_frames=8 if args.fast else 16,
         ),
         "roofline": roofline_report.bench,
     }

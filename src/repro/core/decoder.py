@@ -39,6 +39,12 @@ import jax
 import jax.numpy as jnp
 
 from .trellis import AcsTables, CodeSpec, build_acs_tables
+from .validate import (
+    InvalidInputError,
+    RenormGuard,
+    batch_headroom_check,
+    validate_llrs,
+)
 from .viterbi import (
     AcsPrecision,
     TiledDecoderConfig,
@@ -59,7 +65,12 @@ from .kernel_geometry import (  # pallas-free §8/§9 geometry rules
     time_parallel_plan,
 )
 
-__all__ = ["StreamState", "ViterbiDecoder", "DEFAULT_DECISION_DEPTH"]
+__all__ = [
+    "StreamState",
+    "ViterbiDecoder",
+    "DEFAULT_DECISION_DEPTH",
+    "InvalidInputError",  # re-export: the front door's typed rejection
+]
 
 # ~5K stages of decision delay (DESIGN.md §6): survivor merge is certain
 # for any constraint length we serve, at ~decision_depth*S bytes of state.
@@ -221,6 +232,8 @@ class ViterbiDecoder:
         block_frames: Optional[int] = None,
         time_parallel: Optional[bool] = None,
         transfer_tile: Optional[int] = None,
+        validate_inputs: bool = True,
+        sanitize: bool = False,
     ):
         if decision_depth % rho:
             raise ValueError(
@@ -270,6 +283,21 @@ class ViterbiDecoder:
                 -(-int(decision_depth * puncture.expansion) // rho) * rho
             )
         self.decision_depth = decision_depth
+        # §14 data-plane hardening: validate every host-side entry point
+        # (strict raise, or clamp-and-count with sanitize=True), and for
+        # no-renorm precisions attach the renorm-cadence guard — the
+        # carry drifts monotonically without the per-step max
+        # subtraction, and narrow carries (bf16) absorb increments long
+        # before they wrap.  The guard observes the host-visible carry
+        # between streaming chunks and renormalizes (shift-invariant for
+        # traceback) before headroom runs out.
+        self.validate_inputs = validate_inputs
+        self.sanitize = sanitize
+        self.sanitized_total = 0
+        self.renorm_guard: Optional[RenormGuard] = (
+            RenormGuard.for_precision(self.precision)
+            if (validate_inputs and not self.precision.renorm) else None
+        )
 
     @classmethod
     def from_standard(
@@ -285,6 +313,8 @@ class ViterbiDecoder:
         block_frames: Optional[int] = None,
         time_parallel: Optional[bool] = None,
         transfer_tile: Optional[int] = None,
+        validate_inputs: bool = True,
+        sanitize: bool = False,
     ) -> "ViterbiDecoder":
         """One front door for every deployed standard (DESIGN.md §7):
         resolves a ``repro.codes.registry`` entry — mother code, puncture
@@ -308,6 +338,8 @@ class ViterbiDecoder:
             block_frames=block_frames,
             time_parallel=time_parallel,
             transfer_tile=transfer_tile,
+            validate_inputs=validate_inputs,
+            sanitize=sanitize,
         )
 
     @classmethod
@@ -349,6 +381,23 @@ class ViterbiDecoder:
             time_parallel=getattr(vcfg, "time_parallel", None),
             transfer_tile=getattr(vcfg, "transfer_tile", None),
         )
+
+    # -- §14 input hardening ----------------------------------------------
+
+    def _harden(self, llrs, where: str = "decoder"):
+        """Validate (or sanitize) one LLR array at a host-side entry
+        point.  Strict mode raises :class:`InvalidInputError` on
+        NaN/Inf; ``sanitize=True`` clamps-and-counts instead (the counts
+        reach ``decoder_input_sanitized_total`` and
+        ``self.sanitized_total``).  No-op for jit tracers and when
+        ``validate_inputs=False``."""
+        if not self.validate_inputs:
+            return llrs
+        llrs, n_bad = validate_llrs(
+            llrs, sanitize=self.sanitize, where=where
+        )
+        self.sanitized_total += n_bad
+        return llrs
 
     # -- rate matching ----------------------------------------------------
 
@@ -416,7 +465,16 @@ class ViterbiDecoder:
             return self.decode_tailbiting(
                 llrs, time_parallel=time_parallel
             )[0]
+        llrs = self._harden(llrs)
         F, n, _ = llrs.shape
+        if self.validate_inputs and not self.precision.renorm:
+            batch_headroom_check(
+                self.precision,
+                -(-n // self.rho),
+                float(jnp.max(jnp.abs(llrs))) if n else 0.0,
+                self.rho,
+                llrs.shape[2],
+            )
         pad = (-n) % self.rho
         if pad:
             if final_state is not None:
@@ -471,7 +529,7 @@ class ViterbiDecoder:
         """
         from repro.codes.tailbiting import DEFAULT_WAVA_ITERS, wava_decode
 
-        llrs = self.depunctured(llrs)
+        llrs = self._harden(self.depunctured(llrs))
         F, n = llrs.shape[0], llrs.shape[1]
         tables = (
             self.tables if n % self.rho == 0
@@ -528,7 +586,7 @@ class ViterbiDecoder:
                 "tiled stream decode assumes an open (non-circular) "
                 "trellis; use decode_batch/decode_tailbiting per frame"
             )
-        llrs = self.depunctured(llrs, stream=True)
+        llrs = self._harden(self.depunctured(llrs, stream=True))
         cfg = cfg or self.default_tiled_config()
         if cfg.rho != self.rho:
             raise ValueError(f"cfg.rho={cfg.rho} != decoder rho={self.rho}")
@@ -610,15 +668,29 @@ class ViterbiDecoder:
         stages of lookahead, so the full/streaming agreement guarantee is
         unchanged, and phi never touches HBM.
         """
+        llrs = self._harden(llrs, where="stream")
         F, c, _ = llrs.shape
         if F != state.n_frames:
             raise ValueError(f"state has {state.n_frames} frames, got {F}")
         blocks = blocks_from_llrs(jnp.asarray(llrs), self.rho)
         hist, lam, bits = self._dispatch_chunk(state.hist, state.lam, blocks)
         T = c // self.rho
+        lam = self._guard_carry(lam, state.pos + T, T)
         n_valid = _window_valid(state.pos, T, state.depth_steps)
         out = bits[:, (T - n_valid) * self.rho:] if n_valid else bits[:, :0]
         return StreamState(lam=lam, hist=hist, pos=state.pos + T), out
+
+    def _guard_carry(self, lam, pos: int, t_chunk: int):
+        """§14 renorm-cadence guard hook: between chunks the carry is
+        host-visible, so for no-renorm precisions observe it on the
+        guard's cadence and renormalize (per-frame max subtraction —
+        shift-invariant for argmax/traceback) before the carry dtype
+        runs out of headroom.  Inert for renorm=True precisions."""
+        guard = self.renorm_guard
+        if guard is None or not guard.due(pos, t_chunk):
+            return lam
+        lam, _ = guard.observe(lam, t_chunk=t_chunk)
+        return lam
 
     def _dispatch_chunk(self, hist, lam, blocks):
         """One chunk window of ACS + delayed traceback on raw carries:
@@ -684,12 +756,18 @@ class ViterbiDecoder:
                 raise ValueError(
                     f"state has {s.n_frames} frames, chunk {ch.shape[0]}"
                 )
-        blocks = blocks_from_llrs(jnp.concatenate(chunks, axis=0), self.rho)
+        stacked = self._harden(
+            jnp.concatenate(chunks, axis=0), where="stream"
+        )
+        blocks = blocks_from_llrs(stacked, self.rho)
         hist = jnp.concatenate([s.hist for s in states], axis=1)
         lam = jnp.concatenate([s.lam for s in states], axis=0)
         hist2, lam2, bits = self._dispatch_chunk(hist, lam, blocks)
         T = steps.pop() // self.rho
         D = depths.pop()
+        if self.renorm_guard is not None and any(
+                self.renorm_guard.due(s.pos + T, T) for s in states):
+            lam2, _ = self.renorm_guard.observe(lam2, t_chunk=T)
         new_states, outs, off = [], [], 0
         for s in states:
             f = s.n_frames
@@ -794,7 +872,7 @@ class ViterbiDecoder:
             )
         _count_dispatch("sharded")
         return sharded_decode_frames(
-            self.depunctured(llrs),
+            self._harden(self.depunctured(llrs)),
             self.spec,
             rho=self.rho,
             mesh=mesh,

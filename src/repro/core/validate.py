@@ -1,0 +1,305 @@
+"""Data-plane input hardening and path-metric overflow guards (DESIGN.md §14).
+
+Two independent defenses live here, both sitting at the ``ViterbiDecoder``
+front door (and re-used by ``DecodeEngine.submit`` / the sharded dispatcher):
+
+  * :func:`validate_llrs` — a validation/sanitization pass over incoming
+    LLR arrays.  Non-finite samples (NaN/Inf) otherwise flow straight into
+    the fused max-plus matmuls, where a single NaN poisons every path
+    metric it touches and the decoder emits arbitrary bits with no signal.
+    Strict mode raises a typed :class:`InvalidInputError`; ``sanitize=True``
+    clamps instead (NaN -> 0.0, the no-information erasure; +/-Inf and
+    out-of-range samples -> +/-``LLR_CLAMP``) and counts every repaired
+    sample into the ``decoder_input_sanitized_total{reason}`` metric family.
+
+  * :class:`RenormGuard` — the renorm-cadence guard for the §2/§8/§9
+    no-renorm precisions.  With ``AcsPrecision(renorm=False)`` the carry
+    metrics drift monotonically (nothing subtracts the per-step max), and
+    for narrow carries (bf16: 8 mantissa digits) the per-step branch
+    increments are silently absorbed once ``|lam|`` crosses
+    ``2**mantissa_digits`` — decodes keep "succeeding" while the ACS
+    comparisons quantize away, the exact failure mode Peng et al.
+    (arXiv:1608.00066) renormalize against.  The guard observes the
+    host-visible carry between streaming chunks, renormalizes (per-frame
+    max subtraction — shift-invariant for argmax/traceback, so decisions
+    are unchanged outside the saturation regime) when the soft headroom
+    threshold is crossed, auto-tightens its observation cadence when
+    drift is fast, and raises :class:`MetricOverflowError` if a chunk
+    lands beyond the hard limit where absorption has already begun.
+    Events are counted into ``decoder_renorm_guard_total{event}``.
+
+Both are preconditions for the ROADMAP int8/fp8 quantized-metric item:
+quantized carries need exactly this detect-renorm-or-fail loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "LLR_CLAMP",
+    "InvalidInputError",
+    "MetricOverflowError",
+    "validate_llrs",
+    "RenormGuard",
+]
+
+# Finite clamp for sanitized samples: large enough to dominate any real
+# channel LLR, small enough to survive a cast to float16 (max 65504).
+LLR_CLAMP = 1.0e4
+
+# Matches viterbi.NEG: the one-hot init sentinel for unreachable states.
+# Guard statistics must ignore it or the sentinel reads as "overflow".
+_NEG_FLOOR = -5.0e8
+
+
+class InvalidInputError(ValueError):
+    """Typed rejection of malformed decoder input.
+
+    ``reason`` is a short machine-readable tag (``"non_finite"``,
+    ``"shape"``, ``"puncture"``) reused as the metric label and as the
+    engine's per-ticket error suffix.  Subclasses ``ValueError`` so
+    callers that guarded the old untyped raises keep working.
+    """
+
+    def __init__(self, message: str, reason: str = "invalid"):
+        super().__init__(message)
+        self.reason = reason
+
+
+class MetricOverflowError(RuntimeError):
+    """Path-metric dynamic range exceeded the carry dtype's headroom.
+
+    Raised by :class:`RenormGuard` (streaming) or the batch headroom
+    check when a no-renorm decode has drifted past the point where the
+    configured ``AcsPrecision`` can still represent branch increments.
+    The fix is always one of: enable ``renorm=True``, shorten frames, or
+    let the guard renormalize (the default for chunked streaming).
+    """
+
+
+def _count(family: str, n: int = 1, **labels) -> None:
+    # Late import: obs is dependency-free but core must stay importable
+    # even if obs is stripped.  NullRegistry makes this free by default.
+    try:
+        from repro.obs import default_registry
+    except Exception:  # pragma: no cover - obs always present in-tree
+        return
+    default_registry().counter(family).inc(n, **labels)
+
+
+def _is_tracer(x) -> bool:
+    import jax
+
+    return isinstance(x, jax.core.Tracer)
+
+
+def validate_llrs(
+    llrs,
+    *,
+    sanitize: bool = False,
+    clamp: float = LLR_CLAMP,
+    where: str = "decoder",
+    registry=None,
+):
+    """Validate (or repair) an LLR array before it reaches the kernels.
+
+    Returns ``(llrs, n_sanitized)``.  Strict mode (``sanitize=False``)
+    raises :class:`InvalidInputError` with ``reason="non_finite"`` on any
+    NaN/Inf sample.  Sanitize mode maps NaN -> 0.0 (erasure), +/-Inf and
+    any sample beyond ``clamp`` to ``+/-clamp``, and counts repairs into
+    ``decoder_input_sanitized_total{reason, where}`` — per-reason
+    (``nan`` vs ``clamped``) so saturating front-ends are distinguishable
+    from genuinely corrupt feeds.  Inside a jit trace the check is a
+    no-op (tracers carry no values); the engine and the decoder front
+    doors all sit outside jit, which is where this runs.
+    """
+    if _is_tracer(llrs):
+        return llrs, 0
+    if isinstance(llrs, np.ndarray):
+        finite = bool(np.isfinite(llrs).all())
+    else:
+        import jax.numpy as jnp
+
+        finite = bool(jnp.isfinite(llrs).all())
+    n_bad = 0
+    if not finite or sanitize:
+        if isinstance(llrs, np.ndarray):
+            arr = llrs.astype(np.float32, copy=False)
+            nan = np.isnan(arr)
+            over = np.abs(arr) > clamp  # catches +/-Inf too
+            n_nan = int(nan.sum())
+            n_over = int(np.count_nonzero(over & ~nan))
+            n_bad = n_nan + n_over
+        else:
+            import jax.numpy as jnp
+
+            arr = llrs
+            nan = jnp.isnan(arr)
+            over = jnp.abs(arr) > clamp
+            n_nan = int(jnp.sum(nan))
+            n_over = int(jnp.sum(over & ~nan))
+            n_bad = n_nan + n_over
+    if not finite and not sanitize:
+        raise InvalidInputError(
+            f"{where}: input LLRs contain non-finite samples "
+            f"({n_bad} offending); pass sanitize=True to clamp-and-count",
+            reason="non_finite",
+        )
+    if sanitize and n_bad:
+        if isinstance(llrs, np.ndarray):
+            arr = np.clip(
+                np.nan_to_num(
+                    llrs.astype(np.float32, copy=True),
+                    nan=0.0, posinf=clamp, neginf=-clamp,
+                ),
+                -clamp, clamp,
+            )
+        else:
+            import jax.numpy as jnp
+
+            arr = jnp.clip(
+                jnp.nan_to_num(llrs, nan=0.0, posinf=clamp, neginf=-clamp),
+                -clamp, clamp,
+            )
+        if registry is not None:
+            fam = registry.counter("decoder_input_sanitized_total")
+            if n_nan:
+                fam.inc(n_nan, reason="nan", where=where)
+            if n_over:
+                fam.inc(n_over, reason="clamped", where=where)
+        else:
+            if n_nan:
+                _count("decoder_input_sanitized_total", n_nan,
+                       reason="nan", where=where)
+            if n_over:
+                _count("decoder_input_sanitized_total", n_over,
+                       reason="clamped", where=where)
+        return arr, n_bad
+    return llrs, 0
+
+
+# ---------------------------------------------------------------------------
+# renorm-cadence guard
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RenormGuard:
+    """Overflow guard for no-renorm carry metrics (DESIGN.md §14).
+
+    ``soft`` is the headroom threshold: once ``max|lam|`` (ignoring the
+    one-hot ``NEG`` sentinel) crosses it, the guard renormalizes the
+    carry by its per-frame max.  ``hard`` is the give-up point — past it
+    the carry has already been absorbing increments, so the guard raises
+    :class:`MetricOverflowError` instead of papering over a wrong decode.
+
+    ``interval_steps`` is the observation cadence in trellis steps:
+    observing the carry costs a host sync, so the guard starts sampling
+    every ``interval_steps`` and *auto-tightens* (halves the interval,
+    floor one chunk) whenever an observation lands above ``soft`` —
+    fast-drifting streams converge to per-chunk renorm, slow ones stay
+    cheap.  Use :meth:`for_precision` to derive thresholds from the
+    carry dtype's mantissa width.
+    """
+
+    soft: float
+    hard: float
+    interval_steps: int = 1024
+    min_interval_steps: int = 1
+    renorms: int = 0
+    tightens: int = 0
+    observations: int = 0
+
+    @classmethod
+    def for_precision(cls, precision, interval_steps: int = 1024
+                      ) -> "RenormGuard":
+        soft = precision.carry_absorb_limit()
+        hard = min(precision.carry_max() / 2.0, soft * 32.0)
+        return cls(soft=soft, hard=hard, interval_steps=interval_steps)
+
+    def due(self, pos: int, t_chunk: int) -> bool:
+        """True when a chunk ending at ``pos`` crosses an observation
+        boundary (every ``interval_steps`` trellis steps)."""
+        if t_chunk <= 0:
+            return False
+        step = max(self.min_interval_steps, self.interval_steps)
+        return (pos // step) > ((pos - t_chunk) // step)
+
+    def observe(self, lam, t_chunk: int = 0):
+        """Observe a host-visible carry; return ``(lam, renormed)``.
+
+        ``lam`` is the ``(F, S)`` float32 carry between chunks.  The NEG
+        sentinel rows of a freshly pinned stream are masked out of the
+        magnitude statistic and left pinned by the renorm shift.
+        """
+        import jax.numpy as jnp
+
+        self.observations += 1
+        live = lam > _NEG_FLOOR
+        mag = float(jnp.max(jnp.where(live, jnp.abs(lam), 0.0)))
+        if mag >= self.hard:
+            _count("decoder_renorm_guard_total", event="overflow")
+            raise MetricOverflowError(
+                f"carry magnitude {mag:.3g} beyond hard headroom "
+                f"{self.hard:.3g}; increments are being absorbed — enable "
+                f"AcsPrecision(renorm=True) or widen the carry dtype"
+            )
+        if mag >= self.soft:
+            mx = jnp.max(jnp.where(live, lam, -jnp.inf),
+                         axis=-1, keepdims=True)
+            lam = jnp.where(live, lam - mx, lam)
+            self.renorms += 1
+            _count("decoder_renorm_guard_total", event="renorm")
+            if t_chunk and self.interval_steps > max(
+                    t_chunk, self.min_interval_steps):
+                # Drift reached soft headroom within one cadence window:
+                # sample twice as often next time.
+                self.interval_steps = max(
+                    t_chunk, self.min_interval_steps,
+                    self.interval_steps // 2,
+                )
+                self.tightens += 1
+                _count("decoder_renorm_guard_total", event="tighten")
+            return lam, True
+        return lam, False
+
+    def stats(self) -> dict:
+        return {
+            "observations": self.observations,
+            "renorms": self.renorms,
+            "tightens": self.tightens,
+            "interval_steps": self.interval_steps,
+        }
+
+
+def batch_headroom_check(precision, t_steps: int, llr_absmax: float,
+                         rho: int, beta: int) -> None:
+    """Pre-dispatch headroom assertion for un-chunked no-renorm decodes.
+
+    The batch path never surfaces the carry to the host, so the guard
+    cannot renormalize mid-frame; instead bound the worst-case drift
+    (``t_steps`` radix steps, each adding at most ``rho*beta`` coded-bit
+    potentials of ``llr_absmax``) and raise before a decode whose carry
+    would wrap to Inf.  Absorption-only risk (bound past the soft limit
+    but far from dtype max) is counted, not raised — the bound is loose
+    and renormalized short frames stay usable.
+    """
+    if precision.renorm:
+        return
+    import jax.numpy as jnp
+
+    bound = float(t_steps) * float(llr_absmax) * float(rho * beta)
+    if bound > precision.carry_max() / 4.0:
+        _count("decoder_renorm_guard_total", event="overflow")
+        raise MetricOverflowError(
+            f"no-renorm decode of {t_steps} steps with max|llr|="
+            f"{llr_absmax:.3g} can drift to ~{bound:.3g}, past the "
+            f"{jnp.dtype(precision.carry_dtype).name} range "
+            f"({precision.carry_max():.3g}); enable renorm or stream "
+            f"in chunks (the §14 guard renormalizes between chunks)"
+        )
+    if bound > precision.carry_absorb_limit():
+        _count("decoder_renorm_guard_total", event="headroom")

@@ -86,6 +86,25 @@ class AcsPrecision:
             parts.append("norenorm")
         return ",".join(parts)
 
+    # -- §14 headroom introspection (core/validate.py renorm guard) --------
+
+    def carry_mantissa_digits(self) -> int:
+        """Significand width of the carry dtype, implicit bit included
+        (f32: 24, f16: 11, bf16: 8) — the log2 of the magnitude at which
+        unit-scale branch increments start being absorbed."""
+        return int(jnp.finfo(self.carry_dtype).nmant) + 1
+
+    def carry_absorb_limit(self) -> float:
+        """Carry magnitude beyond which adding a unit-scale increment
+        loses at least one bit of the increment (2**mantissa_digits).
+        The §14 renorm guard derives its soft threshold from this."""
+        return float(2.0 ** self.carry_mantissa_digits())
+
+    def carry_max(self) -> float:
+        """Largest finite value of the carry dtype (the wrap-to-Inf
+        ceiling the §14 hard limit must stay under)."""
+        return float(jnp.finfo(self.carry_dtype).max)
+
 
 def fused_potentials(
     l_t: jnp.ndarray,  # (rows, B) LLR block

@@ -43,6 +43,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.kernel_geometry import pick_transfer_tile
 from repro.core.trellis import CodeSpec, build_acs_tables
+from repro.core.validate import validate_llrs
 from repro.core.viterbi import (
     AcsPrecision,
     TiledDecoderConfig,
@@ -171,6 +172,9 @@ def sharded_decode_frames(
     mesh = mesh or frame_mesh(axis=axis)
     n_dev = mesh.shape[axis]
     F = llrs.shape[0]
+    # §14 host-side hardening: a single NaN entering shard_map poisons
+    # every path metric of its shard with no visible failure
+    llrs, _ = validate_llrs(llrs, where="sharded")
     llrs = _pad_to(jnp.asarray(llrs), n_dev)
     fn = _frames_fn(
         spec, rho, mesh, axis, initial_state, final_state,
@@ -239,6 +243,7 @@ def sharded_decode_streams(
     mesh = mesh or frame_mesh(axis=axis)
     n_dev = mesh.shape[axis]
     N = llrs.shape[0]
+    llrs, _ = validate_llrs(llrs, where="sharded")
     llrs = _pad_to(jnp.asarray(llrs), n_dev)
     fn = _streams_fn(
         spec, cfg or TiledDecoderConfig(), mesh, axis,

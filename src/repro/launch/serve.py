@@ -205,6 +205,7 @@ def serve_engine(args):
         checkpoint_interval=(
             None if args.checkpoint_dir is None else args.max_wait_ms / 1e3
         ),
+        scrub=args.scrub_rate,
     )
     rng = np.random.default_rng(0)
     lens = [args.stream_len // 4, args.stream_len // 3, args.stream_len // 2]
@@ -268,6 +269,16 @@ def serve_engine(args):
             f"degraded={s['degraded']} failovers={s['failovers']} "
             f"expired={s['expired']} failed={errored} "
             f"checkpoints={s['checkpoints']}"
+        )
+    if args.scrub_rate > 0:
+        # the §14 data-integrity quarantine summary of the drain
+        sc = s["scrub"]
+        print(
+            f"[engine] scrub rate={sc['rate']} sampled={sc['sampled']} "
+            f"frames={sc['frames']} flags={sc['syndrome_flags']} "
+            f"confirmed={sc['confirmed']} "
+            f"false_alarms={sc['false_alarms']} "
+            f"quarantined={s['quarantined']} sanitized={s['sanitized']}"
         )
         if final_ckpt is not None:
             print(f"[engine] final session checkpoint -> {final_ckpt}")
@@ -366,6 +377,15 @@ def main():
         "chunked-streaming session table here (DESIGN.md §13); the "
         "graceful drain writes a final checkpoint and prints failover "
         "stats",
+    )
+    ap.add_argument(
+        "--scrub-rate", type=float, default=0.0,
+        help="engine service: sampled fraction of dispatches run "
+        "through the §14 online SDC scrubber (re-encode syndrome check "
+        "+ shadow re-decode; confirmed corruption fails the ticket "
+        "with sdc_detected and quarantines the device); 0 disables — "
+        "the engine then makes no extra calls at all.  The drain "
+        "prints the scrub/quarantine summary",
     )
     ap.add_argument(
         "--metrics-jsonl", default=None,

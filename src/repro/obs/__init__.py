@@ -28,6 +28,16 @@ recorded, not slept), ``engine_degraded_total{from,to}``,
 ``expired``/``failed``/``restored`` lifecycle events on the request and
 session families.
 
+So does the §14 data-integrity plane: ``engine_scrub_total{event}``
+(``sampled``/``frames``/``syndrome_flag`` from the online SDC
+scrubber), ``engine_quarantined_total`` (devices failed over on
+confirmed corruption), ``decoder_input_sanitized_total{reason,where}``
+(clamp-and-count input hardening) and
+``decoder_renorm_guard_total{event}`` (overflow-guard renorms and
+tightenings for no-renorm precisions), plus the ``invalid``/``sdc``
+events on the request family.  ``repro.obs.top`` renders one
+``integrity`` line from these when any has fired.
+
 CLI entry points: ``python -m repro.obs.top`` (terminal snapshot) and
 ``python -m repro.obs.smoke`` (the CI gate).
 """

@@ -90,6 +90,20 @@ def render_snapshot(snap: dict) -> str:
         if real_e + pad_e else "padding   waste=-"
     )
 
+    # §14 data-integrity plane (rendered only when it has seen traffic)
+    inv = _total(snap, "engine_requests_total", event="invalid")
+    sdc = _total(snap, "engine_requests_total", event="sdc")
+    scr_f = _total(snap, "engine_scrub_total", event="frames")
+    scr_fl = _total(snap, "engine_scrub_total", event="syndrome_flag")
+    quar = _total(snap, "engine_quarantined_total")
+    san = _total(snap, "decoder_input_sanitized_total")
+    if inv or sdc or scr_f or quar or san:
+        lines.append(
+            f"integrity scrubbed={scr_f:.0f} flags={scr_fl:.0f} "
+            f"sdc={sdc:.0f} quarantined={quar:.0f}"
+            f"   invalid={inv:.0f} sanitized={san:.0f}"
+        )
+
     # sojourn quantiles per SLO class
     soj = snap.get("engine_sojourn_seconds")
     if soj and soj["series"]:

@@ -27,6 +27,13 @@ Four fault kinds mirror what real accelerator fleets see:
   * ``compile_error`` — a transient jit/compile failure; raised as
     ``TransientCompileError`` and retried (real XLA compile flakes are
     transient by nature: OOM races, cache eviction).
+  * ``bit_flip`` — silent data corruption (DESIGN.md §14): nothing is
+    raised.  ``on_dispatch`` ARMS the event instead, and the engine
+    calls ``corrupt(bits)`` after the dispatch returns — the armed
+    events then flip ``flips`` seeded-deterministic bit positions in
+    the emitted array.  This is the only fault kind the infrastructure
+    layer cannot see; it exists so the §14 SDC scrubber's detect ->
+    quarantine loop is provable in chaos tests.
 
 Schedules are either hand-written (tests pin events to known attempt
 indices) or drawn from a seeded RNG (``ChaosSchedule.generate``), and
@@ -53,7 +60,9 @@ __all__ = [
     "FAULT_KINDS",
 ]
 
-FAULT_KINDS = ("device_failure", "timeout", "slow", "compile_error")
+FAULT_KINDS = (
+    "device_failure", "timeout", "slow", "compile_error", "bit_flip",
+)
 
 
 class InjectedFault(RuntimeError):
@@ -101,8 +110,10 @@ class FaultEvent:
     (None = any path); an event whose attempt index passes with a
     non-matching path is skipped, not deferred — schedules stay
     attempt-indexed and deterministic.  ``device`` names the failing
-    device for ``device_failure``; ``delay`` is the straggler delay in
-    seconds for ``slow``.
+    device for ``device_failure`` (and the silently corrupting device
+    for ``bit_flip`` — the scrubber's quarantine target); ``delay`` is
+    the straggler delay in seconds for ``slow``; ``flips`` is the
+    number of output bits a ``bit_flip`` event corrupts.
     """
 
     at: int
@@ -110,6 +121,7 @@ class FaultEvent:
     device: Optional[int] = None
     delay: float = 0.0
     path: Optional[str] = None
+    flips: int = 1
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -142,6 +154,8 @@ class ChaosSchedule:
                 d["delay"] = e.delay
             if e.path is not None:
                 d["path"] = e.path
+            if e.flips != 1:
+                d["flips"] = e.flips
             events.append(d)
         return {"events": events}
 
@@ -169,12 +183,14 @@ class ChaosSchedule:
         p_compile: float = 0.01,
         n_devices: int = 1,
         slow_delay: float = 0.05,
+        p_bit_flip: float = 0.0,
+        max_flips: int = 1,
     ) -> "ChaosSchedule":
         """Draw a schedule from a seeded RNG: each attempt index
         independently hosts at most one fault, with the given per-kind
         probabilities.  Same seed -> same schedule, always."""
         rng = np.random.default_rng(seed)
-        probs = (p_device, p_timeout, p_slow, p_compile)
+        probs = (p_device, p_timeout, p_slow, p_compile, p_bit_flip)
         edges = np.cumsum(probs)
         if edges[-1] > 1.0:
             raise ValueError(f"fault probabilities sum to {edges[-1]} > 1")
@@ -188,8 +204,10 @@ class ChaosSchedule:
                 at=at,
                 kind=kind,
                 device=(int(rng.integers(0, n_devices))
-                        if kind == "device_failure" else None),
+                        if kind in ("device_failure", "bit_flip") else None),
                 delay=float(slow_delay) if kind == "slow" else 0.0,
+                flips=(int(rng.integers(1, max_flips + 1))
+                       if kind == "bit_flip" else 1),
             ))
         return cls(events)
 
@@ -214,14 +232,23 @@ class ChaosInjector:
             self._by_at.setdefault(e.at, []).append(e)
         self.attempts = 0
         self.injected: Dict[str, int] = collections.Counter()
+        self._armed: List[FaultEvent] = []  # pending bit_flip events
 
     def on_dispatch(self, code: str, path: str) -> float:
-        """Advance the attempt counter; raise or return a delay."""
+        """Advance the attempt counter; raise or return a delay.
+
+        ``bit_flip`` events never raise — the corruption is *silent* by
+        definition.  They are armed here and fire when the engine hands
+        the dispatch's output to :meth:`corrupt`.
+        """
         at = self.attempts
         self.attempts += 1
         delay = 0.0
         for e in self._by_at.get(at, ()):
             if e.path is not None and e.path != path:
+                continue
+            if e.kind == "bit_flip":
+                self._armed.append(e)
                 continue
             self.injected[e.kind] += 1
             if e.kind == "slow":
@@ -233,6 +260,33 @@ class ChaosInjector:
                     f"injected {e.kind} at attempt {at} ({code}/{path})"
                 )
         return delay
+
+    def corrupt(self, bits: np.ndarray):
+        """Apply armed ``bit_flip`` events to a dispatch's decoded bits.
+
+        Returns ``(bits, device)``: a corrupted copy (or the input
+        unchanged when nothing is armed) and the device attributed to
+        the last fired event (None when clean).  Flip positions are
+        drawn from an RNG seeded by the event's attempt index — the
+        same schedule corrupts the same positions every run.  Counted
+        into ``injected["bit_flip"]`` at fire time, so scrubber
+        detection totals can be compared against it exactly.
+        """
+        if not self._armed:
+            return bits, None
+        out = np.array(bits, copy=True)
+        flat = out.reshape(-1)
+        device = None
+        for e in self._armed:
+            rng = np.random.default_rng(1_000_003 * (e.at + 1) + 17)
+            n = min(max(1, e.flips), flat.shape[0])
+            idx = rng.choice(flat.shape[0], size=n, replace=False)
+            flat[idx] ^= 1
+            self.injected["bit_flip"] += 1
+            if e.device is not None:
+                device = e.device
+        self._armed.clear()
+        return out, device
 
     def total_injected(self) -> int:
         return int(sum(self.injected.values()))

@@ -18,6 +18,12 @@ checkpoint/failover handoff to a second engine.  The gate asserts the
   * bounded retries — the engine's retry counter never exceeds the
     number of injected faults (each fault buys at most one retry).
 
+A second stage injects the silent fault kind (DESIGN.md §14): >= 2
+``bit_flip`` events corrupt decoded batch output post-dispatch, and the
+gate asserts the online SDC scrubber detects and quarantines every one
+— corrupt bits are never emitted, the attributed device is failed over,
+and clean frames stay bit-identical to an unscrubbed run.
+
 Exits non-zero on any violation.
 """
 from __future__ import annotations
@@ -139,12 +145,57 @@ def main() -> int:
         got = np.concatenate(pre + [tr.bits, t3.bits, tail])
         assert np.array_equal(got, refs["t0"]), "failover not bit-exact"
 
+    # -- stage 2: silent data corruption (DESIGN.md §14) ------------------
+    # >= 2 bit_flip events against scrubbed batch traffic: every
+    # corrupted frame must end sdc_detected (never emitted), the
+    # attributed device quarantined, clean frames bit-identical
+    from repro.codes.simulate import sim_frame_batch
+
+    _, frame_llrs = sim_frame_batch(
+        jax.random.PRNGKey(7), code, 8, 120, 6.5
+    )
+    frame_llrs = np.asarray(frame_llrs)
+
+    def sdc_run(chaos=None, scrub=1.0):
+        eng = DecodeEngine(max_batch=4, scrub=scrub, chaos=chaos)
+        ts = [eng.submit(DecodeRequest(
+            llrs=frame_llrs[i], code="ccsds-k7", flushed=True
+        ), now=0.0) for i in range(8)]
+        eng.drain(now=0.0)
+        return eng, ts
+
+    _, ref_t = sdc_run(scrub=0.0)
+    ref_bits = [t.bits.copy() for t in ref_t]
+    sdc_sched = ChaosSchedule([
+        FaultEvent(at=0, kind="bit_flip", device=0, flips=2),
+        FaultEvent(at=1, kind="bit_flip", device=0, flips=2),
+    ])
+    sdc_inj = ChaosInjector(sdc_sched)
+    eng2, t2 = sdc_run(chaos=sdc_inj)
+    s2 = eng2.stats()
+    assert sdc_inj.injected["bit_flip"] == 2, sdc_inj.injected
+    detected = [i for i, t in enumerate(t2) if t.error == "sdc_detected"]
+    missed = [
+        i for i, t in enumerate(t2)
+        if t.error is None and not np.array_equal(t.bits, ref_bits[i])
+    ]
+    assert not missed, f"corrupt bits emitted undetected: {missed}"
+    assert len(detected) >= 2, f"SDCs detected: {detected}"
+    assert s2["scrub"]["confirmed"] == len(detected), s2["scrub"]
+    assert s2["scrub"]["false_alarms"] == 0, s2["scrub"]
+    assert s2["quarantined"] == [0], s2["quarantined"]
+    assert s2["failovers"] >= 1, s2["failovers"]
+    for i, t in enumerate(t2):
+        if i not in detected:
+            assert np.array_equal(t.bits, ref_bits[i]), i
+
     print(
         f"[chaos-smoke] PASS: {len(streams)} sessions bit-exact under "
         f"{injected} injected faults ({dict(injector.injected)}); "
         f"retries={s['retries']} (bound {injected}); "
         f"failovers={s['failovers']}; checkpoint/replay failover "
-        f"bit-exact; 0 dropped"
+        f"bit-exact; 0 dropped; {len(detected)} injected SDCs "
+        f"detected+quarantined (0 false positives)"
     )
     return 0
 

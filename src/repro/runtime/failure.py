@@ -27,6 +27,7 @@ __all__ = [
     "MeshPlan",
     "StragglerMonitor",
     "RetryPolicy",
+    "QuarantineRecord",
 ]
 
 
@@ -124,6 +125,28 @@ class RetryPolicy:
 
     def backoff(self, attempt: int) -> float:
         return min(self.backoff_cap, self.backoff_base * (2.0 ** attempt))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantineRecord:
+    """One confirmed-SDC quarantine (DESIGN.md §14).
+
+    A device failure is self-announcing; a silently corrupting device
+    is only ever *inferred* — by the serving engine's online scrubber
+    (syndrome flag confirmed by shadow re-decode).  The engine appends
+    one record per quarantined device to ``engine.quarantine_log`` and
+    then routes the device through the same ``replan_mesh`` failover a
+    hard failure takes.  The record keeps the evidence: which cell,
+    which decode path, and how many of its frames were confirmed
+    corrupt — the post-mortem trail a fleet operator pulls before
+    re-admitting the device.
+    """
+
+    device: int
+    at: float  # engine-clock time of the quarantine
+    code: str
+    path: str
+    frames_confirmed: int
 
 
 class StragglerMonitor:

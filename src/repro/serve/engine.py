@@ -92,10 +92,12 @@ from repro.core.kernel_geometry import (
     pick_cell_length,
     time_parallel_plan,
 )
+from repro.core.validate import InvalidInputError, validate_llrs
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NullRecorder, SpanRecorder
 from repro.runtime.chaos import DeviceFailure, DispatchTimeout
-from repro.runtime.failure import RetryPolicy
+from repro.runtime.failure import QuarantineRecord, RetryPolicy
+from repro.verify.scrub import SdcScrubber
 
 __all__ = [
     "SLO_CLASSES",
@@ -263,6 +265,25 @@ class DecodeEngine:
     checkpoint_interval : engine-clock seconds between automatic
                        session-table checkpoints during poll (None =
                        only explicit ``checkpoint_sessions`` calls).
+    scrub            : online SDC scrubber (DESIGN.md §14) — a
+                       ``verify.scrub.SdcScrubber``, a float sample
+                       rate shorthand, or None/0.0 (disabled: the
+                       engine makes NO extra calls and its output is
+                       bit-identical to a pre-scrubber engine).
+                       Sampled batch dispatches get a re-encode
+                       syndrome check per frame; flags are confirmed by
+                       a shadow re-decode on an independent ladder rung,
+                       and confirmed corruption fails the frame's
+                       ticket with ``sdc_detected`` and quarantines the
+                       attributed device through ``replan_mesh``.
+                       Session dispatches are not scrubbed (carry-state
+                       chunks have no per-frame re-encode framing).
+    sanitize         : clamp-and-count mode for ``submit`` input
+                       hardening: NaN -> 0.0 (erasure), +/-Inf and
+                       out-of-range samples -> clamped, counted into
+                       ``decoder_input_sanitized_total``.  False
+                       (default) rejects non-finite input with a typed
+                       per-ticket ``invalid_input:non_finite`` error.
     """
 
     def __init__(
@@ -285,6 +306,8 @@ class DecodeEngine:
         monitor=None,
         checkpoint_dir=None,
         checkpoint_interval: Optional[float] = None,
+        scrub=None,
+        sanitize: bool = False,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -306,6 +329,16 @@ class DecodeEngine:
         self.monitor = monitor
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_interval = checkpoint_interval
+        if scrub is None:
+            scrub = SdcScrubber(rate=0.0)
+        elif isinstance(scrub, (int, float)):
+            scrub = SdcScrubber(rate=float(scrub))
+        self.scrub = scrub
+        self.sanitize = bool(sanitize)
+        self._quarantined: set = set()
+        # §14 post-mortem trail: one QuarantineRecord per device, with
+        # the cell/path/frame evidence the quarantine was based on
+        self.quarantine_log: List[QuarantineRecord] = []
         self._last_ckpt: Optional[float] = None
         self._ckpt_steps = itertools.count()
         self._failed_devices: set = set()
@@ -403,6 +436,21 @@ class DecodeEngine:
         )
         self._m_ckpt = r.counter(
             "engine_checkpoints_total", "session-table checkpoints written"
+        )
+        # §14 data-integrity accounting
+        self._m_scrub = r.counter(
+            "engine_scrub_total",
+            "SDC-scrubber events (sampled/frames/syndrome_flag/shadow/"
+            "confirmed/false_alarm)",
+        )
+        self._m_quarantine = r.counter(
+            "engine_quarantined_total",
+            "devices quarantined after confirmed silent data corruption",
+        )
+        self._m_sanitized = r.counter(
+            "decoder_input_sanitized_total",
+            "input LLR samples repaired at the engine front door, by "
+            "reason (nan/clamped)",
         )
 
     # -- decoders / jit-fn cache ------------------------------------------
@@ -528,7 +576,14 @@ class DecodeEngine:
     # -- request intake ----------------------------------------------------
 
     def _validate(self, req: DecodeRequest):
-        """-> (llrs np.f32, n_stages, serial, l_input) or raises."""
+        """-> (llrs np.f32, n_stages, serial, l_input) or raises.
+
+        §14 input hardening happens here: non-finite samples raise a
+        typed ``InvalidInputError(reason="non_finite")`` (``submit``
+        converts it to a per-ticket ``invalid_input:non_finite`` error
+        so one poisoned tenant cannot fail its batchmates), or — with
+        ``sanitize=True`` — are clamped and counted into
+        ``decoder_input_sanitized_total`` on the engine registry."""
         from repro.codes.registry import get_code
 
         code = get_code(req.code)
@@ -543,6 +598,10 @@ class DecodeEngine:
                     f"{req.code} is punctured: requests carry the serial "
                     f"kept-LLR stream (Lp,), got shape {llrs.shape}"
                 )
+            llrs, _ = validate_llrs(
+                llrs, sanitize=self.sanitize, where="engine",
+                registry=self.registry,
+            )
             n_stages = code.puncture.stages_for(llrs.shape[0])
             return llrs, n_stages, True, llrs.shape[0]
         if llrs.ndim != 2 or llrs.shape[1] != code.spec.beta:
@@ -550,6 +609,10 @@ class DecodeEngine:
                 f"{req.code} requests carry (n, beta={code.spec.beta}) "
                 f"shaped LLRs, got shape {llrs.shape}"
             )
+        llrs, _ = validate_llrs(
+            llrs, sanitize=self.sanitize, where="engine",
+            registry=self.registry,
+        )
         return llrs, llrs.shape[0], False, llrs.shape[0]
 
     def _cell_length(self, req_code, serial: bool, exact: bool,
@@ -575,7 +638,24 @@ class DecodeEngine:
         from repro.codes.registry import get_code
 
         now = time.monotonic() if now is None else now
-        llrs, n_stages, serial, l_input = self._validate(req)
+        try:
+            llrs, n_stages, serial, l_input = self._validate(req)
+        except InvalidInputError as e:
+            # §14: a malformed payload fails ITS OWN ticket — shape
+            # misuse still raises (caller bug), but non-finite data is
+            # a data-plane condition any tenant can hit at runtime
+            ticket = Ticket(
+                id=next(self._ids),
+                code=req.code,
+                slo=req.slo,
+                submitted=now,
+                n_out=0,
+            )
+            ticket.done = True
+            ticket.error = f"invalid_input:{e.reason}"
+            ticket.completed = now
+            self._m_requests.inc(1, event="invalid", slo=req.slo)
+            return ticket
         code = get_code(req.code)
         tb = code.termination == "tailbiting"
         dec = self._decoder(req.code)
@@ -733,15 +813,35 @@ class DecodeEngine:
                     )
                 with rec.span("engine.device_wait"):
                     bits = np.asarray(out)
+                if self.chaos is not None:
+                    # armed bit_flip events corrupt the decoded bits
+                    # AFTER the dispatch — silent by definition; only
+                    # the §14 scrubber below can catch it
+                    bits, sdc_device = self.chaos.corrupt(bits)
+                else:
+                    sdc_device = None
                 if prof is not None:
                     wall = rec.clock() - dsp.t0
                     dsp.set(**prof.achieved(wall))
                     self._m_dispatch.observe(
                         wall, code=code_name, path=path, f=f_cell, t=l_cell
                     )
+            corrupt_ids: set = set()
+            if self.scrub.enabled and self.scrub.sample():
+                with rec.span("engine.scrub", n=k, path=path):
+                    corrupt_ids = self._scrub_dispatch(
+                        code_name, path, f_cell, l_cell,
+                        kind == "flushed", entries, bits, dense,
+                        sdc_device, now,
+                    )
             with rec.span("engine.emit", n=k):
                 for i, (ticket, _) in enumerate(entries):
-                    ticket.bits = bits[i, : ticket.n_out].astype(np.int32)
+                    if i in corrupt_ids:
+                        ticket.error = "sdc_detected"
+                    else:
+                        ticket.bits = (
+                            bits[i, : ticket.n_out].astype(np.int32)
+                        )
                     ticket.done = True
                     ticket.completed = now
                     ticket.cell = (code_name, slo, l_cell, f_cell)
@@ -749,7 +849,9 @@ class DecodeEngine:
                     ticket.retries = retries
                     self._m_sojourn.observe(now - ticket.submitted, slo=slo)
         cl = dict(code=code_name, path=path, f=f_cell, t=l_cell)
-        self._m_requests.inc(k, event="completed", slo=slo)
+        self._m_requests.inc(k - len(corrupt_ids), event="completed", slo=slo)
+        if corrupt_ids:
+            self._m_requests.inc(len(corrupt_ids), event="sdc", slo=slo)
         self._m_batches.inc(1, slo=slo, **cl)
         self._m_frames.inc(k, kind="real", **cl)
         self._m_frames.inc(f_cell - k, kind="pad", **cl)
@@ -857,6 +959,87 @@ class DecodeEngine:
                     continue
                 e.engine_retries = retries  # rides to _fail_tickets
                 raise
+
+    # -- online SDC scrubbing (DESIGN.md §14) -----------------------------
+
+    def _scrub_dispatch(
+        self, code_name: str, path: str, f_cell: int, l_cell: int,
+        flushed: bool, entries, bits: np.ndarray, dense: np.ndarray,
+        sdc_device, now: float,
+    ) -> set:
+        """Scrub one sampled batch dispatch; returns the entry indices
+        confirmed corrupt (their tickets get ``sdc_detected``).
+
+        Stage 1 re-encodes every real frame's decoded bits and tests
+        the syndrome against the frame's own submitted LLRs
+        (``verify.scrub.syndrome_check``).  Stage 2 confirms any flag
+        by re-decoding the WHOLE cell once on an independent rung of
+        the §13 ladder (``SHADOW_RUNG``) and comparing bit-exactly —
+        the §10 routing contract makes rungs bit-identical on clean
+        hardware, so a shadow mismatch is corruption, not noise, and a
+        shadow match demotes the flag to a counted false alarm.
+        Confirmed corruption quarantines the attributed device through
+        the §13 ``replan_mesh`` failover machinery."""
+        from repro.codes.registry import get_code
+
+        code = get_code(code_name)
+        flagged = []
+        for i, (ticket, llrs) in enumerate(entries):
+            v = self.scrub.check_frame(bits[i, : ticket.n_out], llrs, code)
+            self._m_scrub.inc(1, event="frames")
+            if v.flagged:
+                flagged.append(i)
+                self._m_scrub.inc(1, event="syndrome_flag")
+        self._m_scrub.inc(1, event="sampled")
+        if not flagged or not self.scrub.shadow:
+            return set()
+        # stage 2: one shadow re-decode of the whole cell, off the
+        # chaos/retry path (a plain dispatch — the scrubber must not
+        # consume the fault schedule's attempt indices)
+        shadow_path = self.scrub.shadow_path(path)
+        self.scrub.counts["shadow_dispatches"] += 1
+        self._m_scrub.inc(1, event="shadow", path=shadow_path)
+        try:
+            fn = self._decode_fn(
+                code_name, shadow_path, f_cell, l_cell, flushed=flushed
+            )
+            shadow_bits = np.asarray(fn(jnp.asarray(dense)))
+        except Exception as e:  # noqa: BLE001 — shadow rung unavailable
+            # cannot confirm: demote to false alarms rather than fail
+            # tickets on unconfirmed suspicion
+            self.recorder.event(
+                "engine.scrub_shadow_failed", error=repr(e), now=now
+            )
+            self.scrub.counts["false_alarms"] += len(flagged)
+            self._m_scrub.inc(len(flagged), event="false_alarm")
+            return set()
+        confirmed = set()
+        for i in flagged:
+            n_out = entries[i][0].n_out
+            if np.array_equal(bits[i, :n_out], shadow_bits[i, :n_out]):
+                self.scrub.counts["false_alarms"] += 1
+                self._m_scrub.inc(1, event="false_alarm")
+            else:
+                confirmed.add(i)
+                self.scrub.counts["confirmed"] += 1
+                self._m_scrub.inc(1, event="confirmed")
+        if confirmed:
+            self.recorder.event(
+                "engine.sdc_confirmed", n=len(confirmed), code=code_name,
+                path=path, device=sdc_device, now=now,
+            )
+            if sdc_device is not None and sdc_device not in self._quarantined:
+                # quarantine = §13 failover with a §14 cause: the
+                # device leaves the mesh and the plan shrinks onto
+                # survivors
+                self._quarantined.add(int(sdc_device))
+                self.quarantine_log.append(QuarantineRecord(
+                    device=int(sdc_device), at=now, code=code_name,
+                    path=path, frames_confirmed=len(confirmed),
+                ))
+                self._m_quarantine.inc(1)
+                self._handle_device_failure(sdc_device, now)
+        return confirmed
 
     def _fail_tickets(self, tickets, exc, slo: str, now: float):
         """Retry budget + ladder exhausted: every rider gets a TYPED
@@ -1110,6 +1293,11 @@ class DecodeEngine:
                         ), False
                 with rec.span("engine.device_wait"):
                     outs = [np.asarray(o) for o in outs]
+                if self.chaos is not None and outs:
+                    # fire any armed bit_flip here so corruption never
+                    # leaks onto a later unrelated dispatch; sessions
+                    # are outside the scrubber's coverage (DESIGN §14)
+                    outs[0], _ = self.chaos.corrupt(outs[0])
                 if prof is not None:
                     wall = rec.clock() - dsp.t0
                     dsp.set(**prof.achieved(wall))
@@ -1387,4 +1575,10 @@ class DecodeEngine:
             "expired": int(self._m_requests.total(event="expired")),
             "failed": int(self._m_requests.total(event="failed")),
             "checkpoints": int(self._m_ckpt.total()),
+            # §14 data-integrity block (additive; zero/empty when the
+            # scrubber is disabled and inputs are clean)
+            "scrub": self.scrub.stats(),
+            "quarantined": sorted(self._quarantined),
+            "invalid": int(self._m_requests.total(event="invalid")),
+            "sanitized": int(self._m_sanitized.total()),
         }

@@ -18,9 +18,22 @@ axis:
 ``python -m repro.verify.farm`` runs the CI smoke grid (``--full`` for
 the nightly grid); ``benchmarks/bench_ber.py`` writes the farm's
 trajectory into ``BENCH_ber.json``.
+
+Since DESIGN.md §14 the package also hosts the online
+silent-data-corruption scrubber (``verify.scrub``): the re-encode
+syndrome check + shadow re-decode two-stage detector the serving
+engine samples live dispatches through, closed in CI by
+``python -m repro.verify.scrub_smoke`` (the `sdc-smoke` gate).
 """
 from .farm import BerFarm, FarmPoint, farm_to_json  # noqa: F401
 from .gate import GateVerdict, all_pass, gate_point, run_gate  # noqa: F401
+from .scrub import (  # noqa: F401
+    SHADOW_RUNG,
+    ScrubVerdict,
+    SdcScrubber,
+    corruption_weight,
+    syndrome_check,
+)
 
 __all__ = [
     "BerFarm",
@@ -30,4 +43,9 @@ __all__ = [
     "gate_point",
     "run_gate",
     "all_pass",
+    "ScrubVerdict",
+    "SdcScrubber",
+    "syndrome_check",
+    "corruption_weight",
+    "SHADOW_RUNG",
 ]

@@ -90,6 +90,58 @@ def test_schedule_json_roundtrip(tmp_path):
         FaultEvent(at=0, kind="meteor_strike")
 
 
+def test_bit_flip_schedule_roundtrip_and_generate():
+    """The silent fault kind (DESIGN.md §14): ``flips`` survives JSON,
+    seeded generation draws bit_flip events with a device attribution
+    and bounded flip counts."""
+    sched = ChaosSchedule([
+        FaultEvent(at=2, kind="bit_flip", device=0, flips=3),
+        FaultEvent(at=5, kind="bit_flip", device=1),  # default flips=1
+    ])
+    back = ChaosSchedule.from_json(json.dumps(sched.to_json()))
+    assert back.events == sched.events
+    assert back.events[0].flips == 3 and back.events[1].flips == 1
+    assert back.counts() == {"bit_flip": 2}
+    gen = ChaosSchedule.generate(
+        seed=5, n_attempts=400, p_device=0.0, p_timeout=0.0, p_slow=0.0,
+        p_compile=0.0, p_bit_flip=0.1, n_devices=4, max_flips=3,
+    )
+    assert gen.events == ChaosSchedule.generate(
+        seed=5, n_attempts=400, p_device=0.0, p_timeout=0.0, p_slow=0.0,
+        p_compile=0.0, p_bit_flip=0.1, n_devices=4, max_flips=3,
+    ).events
+    assert gen.counts() == {"bit_flip": len(gen.events)} and gen.events
+    for e in gen.events:
+        assert 0 <= e.device < 4 and 1 <= e.flips <= 3
+
+
+def test_bit_flip_arms_silently_and_corrupts():
+    """bit_flip never raises at dispatch (the corruption is silent):
+    ``on_dispatch`` arms it, ``corrupt`` fires it — flipping exactly
+    ``flips`` seeded-deterministic positions, attributing the device,
+    and counting at fire time."""
+    inj = ChaosInjector(ChaosSchedule([
+        FaultEvent(at=0, kind="bit_flip", device=2, flips=3),
+    ]))
+    assert inj.on_dispatch("ccsds-k7", "batch") == 0.0  # no raise
+    assert inj.injected["bit_flip"] == 0  # not counted until it fires
+    bits = np.zeros((4, 16), np.int32)
+    out, device = inj.corrupt(bits)
+    assert device == 2 and int(out.sum()) == 3
+    assert bits.sum() == 0  # input untouched (corrupt copies)
+    assert inj.injected["bit_flip"] == 1
+    # armed events are one-shot: the next dispatch output is clean
+    out2, device2 = inj.corrupt(bits)
+    assert device2 is None and out2 is bits
+    # same schedule -> same flip positions, every run
+    inj2 = ChaosInjector(ChaosSchedule([
+        FaultEvent(at=0, kind="bit_flip", device=2, flips=3),
+    ]))
+    inj2.on_dispatch("ccsds-k7", "batch")
+    out3, _ = inj2.corrupt(np.zeros((4, 16), np.int32))
+    np.testing.assert_array_equal(out3, out)
+
+
 def test_schedule_generate_deterministic():
     """Seeded generation is reproducible; probabilities validate."""
     a = ChaosSchedule.generate(seed=7, n_attempts=500, n_devices=4)

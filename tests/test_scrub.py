@@ -1,0 +1,518 @@
+"""Data-plane hardening (DESIGN.md §14): input validation at the
+decoder/engine front doors, the renorm-cadence overflow guard for
+no-renorm precisions, and the online SDC scrubber's re-encode syndrome
+check + shadow re-decode confirmation.
+
+The two property tests pin the §14 detector contract on SYNTHETIC
+correct decodes (the true message of an LLR-consistent AWGN frame — a
+valid codeword whose mismatches are exactly the channel errors, with no
+jax decode in the loop):
+
+  * zero false positives on clean frames, across every registry code
+    and an SNR sweep (the threshold math bounds this by ``alpha``);
+  * guaranteed detection of a clustered two-bit corruption at operating
+    SNRs — flips separated by exactly ``k`` stages have non-overlapping
+    encoder responses (no tap cancellation), so ``>= 12`` confident
+    mismatches land inside one ``2k``-stage window, above the confident
+    threshold.  Positions are chosen by the ``corruption_weight`` probe
+    (weight >= 6, away from the truncated tail — the documented blind
+    spots stay out of the guaranteed region).
+
+Real-decode zero-FP coverage (every registry code through its own
+dispatch path, wifi-11a-r34 punctured and lte-tbcc WAVA included) and
+the engine-level detect -> quarantine -> replan loop are exercised
+end-to-end here too; the CI smoke (``repro.verify.scrub_smoke``) adds
+the multi-device mesh-shrink variant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.codes import encode_standard, get_code, standard_llrs
+from repro.codes.puncture import puncture
+from repro.codes.registry import list_codes
+from repro.codes.simulate import sim_frame_batch
+from repro.core.decoder import ViterbiDecoder
+from repro.core.encoder import conv_encode
+from repro.core.validate import (
+    LLR_CLAMP,
+    InvalidInputError,
+    MetricOverflowError,
+    RenormGuard,
+    batch_headroom_check,
+    validate_llrs,
+)
+from repro.core.viterbi import NEG, AcsPrecision
+from repro.runtime.chaos import ChaosInjector, ChaosSchedule, FaultEvent
+from repro.serve.engine import DecodeEngine, DecodeRequest
+from repro.verify.scrub import (
+    SHADOW_RUNG,
+    SdcScrubber,
+    binom_tail,
+    corruption_weight,
+    syndrome_check,
+)
+from tests._hypothesis_compat import given, settings, strategies as st
+
+CODES = list_codes()
+N_BITS = 96
+
+
+def _clean_frame(code, seed, n, mu):
+    """(message bits, llrs) for one LLR-consistent AWGN frame.
+
+    The true message IS a correct decode of its own frame: re-encoding
+    it reproduces the transmitted codeword, so its syndrome mismatches
+    are exactly the channel's hard errors.  LLRs are drawn from the
+    consistency relation ``llr ~ N(mu * symbol, 2 * mu)`` (what a real
+    AWGN channel at LLR-mean ``mu`` produces), punctured codes emit the
+    serial kept stream (the §7 front-door convention).
+    """
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n).astype(np.int64)
+    tb = code.termination == "tailbiting"
+    if not tb:
+        bits[n - (code.spec.k - 1):] = 0  # zero-termination tail
+    coded = conv_encode(bits, code.spec, tail_bite=tb)
+    sym = 1.0 - 2.0 * coded  # channel convention: bit 0 -> +1
+    llr = rng.normal(mu * sym, np.sqrt(2.0 * mu)).astype(np.float32)
+    if code.puncture is not None:
+        llr = np.asarray(puncture(llr, code.puncture))
+    return bits, llr
+
+
+_strong_pairs_cache = {}
+
+
+def _strong_pairs(name):
+    """Positions t where flipping both t and t+k clears the confident
+    threshold structurally: weight >= 6 each, responses non-overlapping
+    (separation k), away from the truncated last k-1 stages."""
+    if name not in _strong_pairs_cache:
+        code = get_code(name)
+        k = code.spec.k
+        _strong_pairs_cache[name] = [
+            t for t in range(0, N_BITS - 2 * k)
+            if corruption_weight(code, t, N_BITS) >= 6
+            and corruption_weight(code, t + k, N_BITS) >= 6
+        ]
+    return _strong_pairs_cache[name]
+
+
+# -- syndrome check: threshold math ----------------------------------------
+
+
+def test_binom_tail_exact():
+    import math
+
+    # exact tail vs a direct summation for a small case
+    n, p = 12, 0.1
+    for m in range(0, n + 2):
+        direct = sum(
+            float(math.comb(n, j)) * p**j * (1 - p) ** (n - j)
+            for j in range(m, n + 1)
+        )
+        assert binom_tail(n, p, m) == pytest.approx(direct, abs=1e-12)
+    assert binom_tail(10, 0.5, 0) == 1.0
+    assert binom_tail(10, 0.5, 11) == 0.0
+    assert binom_tail(10, 0.0, 1) == 0.0
+    assert binom_tail(10, 1.0, 10) == 1.0
+
+
+def test_corruption_weight_structure():
+    """Mid-frame weight of an unpunctured code is exactly
+    sum(popcount(polys)); the truncated tail weakens it; puncturing
+    never strengthens it — and every registry code keeps weight >= 4
+    at its weakest interior position (the §14 threat-model floor)."""
+    for name in CODES:
+        code = get_code(name)
+        k = code.spec.k
+        w_full = sum(bin(p).count("1") for p in code.spec.polys)
+        mid = corruption_weight(code, N_BITS // 2, N_BITS)
+        if code.puncture is None:
+            assert mid == w_full, name
+        else:
+            assert mid <= w_full, name
+        if code.termination != "tailbiting":
+            # flipping the last message bit only emits one stage
+            assert corruption_weight(code, N_BITS - 1, N_BITS) < w_full
+        interior = min(
+            corruption_weight(code, t, N_BITS)
+            for t in range(0, N_BITS - k)
+        )
+        assert interior >= 4, (name, interior)
+
+
+def test_syndrome_typed_errors():
+    code = get_code("ccsds-k7")  # unpunctured
+    bits = np.zeros(32, np.int64)
+    with pytest.raises(InvalidInputError, match="serial") as ei:
+        syndrome_check(bits, np.ones(64, np.float32), code)
+    assert ei.value.reason == "puncture"
+    with pytest.raises(InvalidInputError) as ei:
+        syndrome_check(bits, np.ones((16, 2), np.float32), code)
+    assert ei.value.reason == "shape"
+    with pytest.raises(InvalidInputError) as ei:
+        syndrome_check(bits, np.ones((32, 3), np.float32), code)
+    assert ei.value.reason == "shape"
+    # all-erasure input: nothing to compare, never flags
+    v = syndrome_check(bits, np.zeros((32, 2), np.float32), code)
+    assert not v.flagged and v.n_compared == 0
+
+
+# -- syndrome check: the two §14 properties --------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    name=st.sampled_from(CODES),
+    seed=st.integers(min_value=0, max_value=10_000),
+    mu=st.floats(min_value=3.0, max_value=14.0),
+)
+def test_clean_decode_never_flags(name, seed, mu):
+    """Zero false positives: a correct decode's mismatches are the
+    channel errors, below threshold by construction — any code, any
+    SNR in the sweep."""
+    code = get_code(name)
+    bits, llr = _clean_frame(code, seed, N_BITS, mu)
+    assert not syndrome_check(bits, llr, code).flagged
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    name=st.sampled_from(CODES),
+    seed=st.integers(min_value=0, max_value=10_000),
+    mu=st.floats(min_value=7.0, max_value=14.0),
+    pick=st.integers(min_value=0, max_value=10_000),
+)
+def test_clustered_corruption_always_flags(name, seed, mu, pick):
+    """Guaranteed detection at operating SNRs: a clustered two-bit flip
+    at structurally strong positions lands >= 12 confident mismatches
+    in one window — over the confident threshold for every code."""
+    code = get_code(name)
+    k = code.spec.k
+    bits, llr = _clean_frame(code, seed, N_BITS, mu)
+    pairs = _strong_pairs(name)
+    t = pairs[pick % len(pairs)]
+    bad = bits.copy()
+    bad[[t, t + k]] ^= 1
+    v = syndrome_check(bad, llr, code)
+    assert v.flagged, (name, t, mu, v)
+
+
+def test_clean_and_corrupt_seeded_sweep():
+    """Hypothesis-free sweep of the same two properties (runs even
+    where hypothesis is unavailable): every registry code, several
+    seeds and SNRs — clean frames never flag, clustered strong-pair
+    corruptions always flag."""
+    for name in CODES:
+        code = get_code(name)
+        k = code.spec.k
+        pairs = _strong_pairs(name)
+        for seed in range(6):
+            for mu in (4.0, 8.0, 12.0):
+                bits, llr = _clean_frame(
+                    code, 31 * seed + int(mu), N_BITS, mu
+                )
+                assert not syndrome_check(bits, llr, code).flagged, (
+                    name, seed, mu
+                )
+                if mu < 7.0:
+                    continue  # detection guaranteed at operating SNRs
+                t = pairs[(7 * seed) % len(pairs)]
+                bad = bits.copy()
+                bad[[t, t + k]] ^= 1
+                assert syndrome_check(bad, llr, code).flagged, (
+                    name, seed, mu, t
+                )
+
+
+def test_real_decodes_never_flag_all_codes():
+    """Every registry code through its real dispatch path (WAVA for
+    lte-tbcc, depuncture for the wifi-11a family): decoded output of
+    AWGN traffic never trips the syndrome — the scrubber is silent on
+    clean hardware."""
+    for name in CODES:
+        code = get_code(name)
+        _, llrs = sim_frame_batch(
+            jax.random.PRNGKey(hash(name) % (2**31)), code, 3, N_BITS, 6.5
+        )
+        llrs = np.asarray(llrs)
+        dec = ViterbiDecoder.from_standard(name)
+        if code.termination == "tailbiting":
+            out = np.asarray(dec.decode_tailbiting(jnp.asarray(llrs))[0])
+        else:
+            out = np.asarray(dec.decode_batch(jnp.asarray(llrs)))
+        for i in range(llrs.shape[0]):
+            v = syndrome_check(out[i], llrs[i], code)
+            assert not v.flagged, (name, i, v)
+
+
+# -- scrubber policy object ------------------------------------------------
+
+
+def test_scrubber_sampling_cadence():
+    with pytest.raises(ValueError, match="rate"):
+        SdcScrubber(rate=1.5)
+    s0 = SdcScrubber(rate=0.0)
+    assert not s0.enabled
+    assert not any(s0.sample() for _ in range(100))
+    s4 = SdcScrubber(rate=0.25)
+    picks = [s4.sample() for _ in range(16)]
+    assert picks == [False, False, False, True] * 4  # deterministic
+    s1 = SdcScrubber(rate=1.0)
+    assert all(s1.sample() for _ in range(10))
+    assert s1.stats()["sampled"] == 10
+    assert set(s1.stats()) == {
+        "rate", "sampled", "frames", "syndrome_flags",
+        "shadow_dispatches", "confirmed", "false_alarms",
+    }
+
+
+def test_shadow_rung_independent():
+    """The shadow re-decode must be a DIFFERENT compiled program than
+    the primary wherever the ladder has a sibling (wava has none)."""
+    for path, shadow in SHADOW_RUNG.items():
+        if path != "wava":
+            assert shadow != path, path
+        assert shadow in SHADOW_RUNG, path
+    assert SdcScrubber().shadow_path("no_such_path") == "batch"
+
+
+# -- input validation ------------------------------------------------------
+
+
+def test_validate_llrs_strict_and_sanitize():
+    bad = np.array([1.0, np.nan, -np.inf, 2e4], np.float32)
+    with pytest.raises(InvalidInputError) as ei:
+        validate_llrs(bad)
+    assert ei.value.reason == "non_finite"
+    out, n = validate_llrs(bad, sanitize=True)
+    assert n == 3  # nan + inf + out-of-range
+    np.testing.assert_array_equal(
+        out, [1.0, 0.0, -LLR_CLAMP, LLR_CLAMP]
+    )
+    # finite strict input passes through untouched (same object)
+    ok = np.ones(4, np.float32)
+    got, n = validate_llrs(ok)
+    assert got is ok and n == 0
+    # jnp path
+    with pytest.raises(InvalidInputError):
+        validate_llrs(jnp.asarray(bad))
+    outj, nj = validate_llrs(jnp.asarray(bad), sanitize=True)
+    assert nj == 3
+    np.testing.assert_array_equal(
+        np.asarray(outj), [1.0, 0.0, -LLR_CLAMP, LLR_CLAMP]
+    )
+
+
+def test_decoder_front_door_hardening():
+    dec = ViterbiDecoder.from_standard("ccsds-k7")
+    llrs = np.ones((1, 32, 2), np.float32)
+    llrs[0, 3, 1] = np.nan
+    with pytest.raises(InvalidInputError):
+        dec.decode_batch(jnp.asarray(llrs))
+    san = ViterbiDecoder.from_standard("ccsds-k7", sanitize=True)
+    out = san.decode_batch(jnp.asarray(llrs))
+    assert out.shape == (1, 32) and san.sanitized_total == 1
+    off = ViterbiDecoder.from_standard("ccsds-k7", validate_inputs=False)
+    off.decode_batch(jnp.asarray(llrs))  # caller opted out: no raise
+
+
+# -- renorm guard ----------------------------------------------------------
+
+
+def test_renorm_guard_unit():
+    g = RenormGuard(soft=100.0, hard=1000.0, interval_steps=64)
+    assert not g.due(32, 16)          # inside the first interval
+    assert g.due(64, 16)              # crossed the boundary
+    assert not g.due(0, 0)
+    # below soft: untouched
+    lam = jnp.asarray([[1.0, 5.0, -3.0]])
+    out, renormed = g.observe(lam, t_chunk=16)
+    assert not renormed and out is lam
+    # above soft: renorm preserves argmax, pins the NEG sentinel
+    lam = jnp.asarray([[150.0, 120.0, NEG]])
+    out, renormed = g.observe(lam, t_chunk=16)
+    assert renormed and g.renorms == 1
+    assert int(jnp.argmax(out)) == 0
+    assert float(out[0, 0]) == 0.0 and float(out[0, 2]) == NEG
+    # soft trigger inside one cadence window tightens the cadence
+    assert g.interval_steps == 32 and g.tightens == 1
+    with pytest.raises(MetricOverflowError):
+        g.observe(jnp.asarray([[2000.0, 0.0]]))
+    assert g.stats()["observations"] == 3
+
+
+def test_renorm_guard_for_precision():
+    f16 = AcsPrecision(carry_dtype=jnp.float16, renorm=False)
+    g = RenormGuard.for_precision(f16)
+    assert g.soft == 2.0**11 and g.hard <= f16.carry_max() / 2.0
+    # renorm=True decoders never attach a guard
+    assert ViterbiDecoder.from_standard("ccsds-k7").renorm_guard is None
+
+
+def test_long_stream_f16_saturation_guarded():
+    """The §14 acceptance scenario: a long chunked stream on a
+    no-renorm f16 carry drifts past the absorb limit; the guard
+    renormalizes between chunks BEFORE absorption corrupts decisions —
+    output stays bit-identical to the f32 renorm reference, and the
+    guard's renorm counter proves it actually fired."""
+    T, C = 4096, 256
+    code = get_code("ccsds-k7")
+    bits = jnp.asarray(
+        np.random.default_rng(0).integers(0, 2, (1, T)), jnp.int32
+    )
+    llrs = np.asarray(standard_llrs(
+        jax.random.PRNGKey(0), encode_standard(bits, code), 5.0, code
+    ))
+    ref = np.asarray(
+        ViterbiDecoder.from_standard("ccsds-k7", decision_depth=128)
+        .decode_stream_chunked(llrs, chunk_len=C, initial_state=None)
+    )
+    dec = ViterbiDecoder.from_standard(
+        "ccsds-k7", decision_depth=128,
+        precision=AcsPrecision(carry_dtype=jnp.float16, renorm=False),
+    )
+    dec.renorm_guard.interval_steps = C // 2  # observe every chunk
+    out = np.asarray(
+        dec.decode_stream_chunked(llrs, chunk_len=C, initial_state=None)
+    )
+    s = dec.renorm_guard.stats()
+    assert s["renorms"] > 0, s  # the guard fired before wrap
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_batch_headroom_check_raises():
+    f16 = AcsPrecision(carry_dtype=jnp.float16, renorm=False)
+    with pytest.raises(MetricOverflowError, match="no-renorm"):
+        batch_headroom_check(f16, 2048, 8.0, 2, 2)
+    batch_headroom_check(f16, 64, 8.0, 2, 2)  # short frame: fine
+    # renorm=True is always exempt
+    batch_headroom_check(AcsPrecision(), 1 << 20, 1e4, 2, 2)
+    # the decoder front door applies it pre-dispatch
+    dec = ViterbiDecoder.from_standard("ccsds-k7", precision=f16)
+    big = jnp.asarray(
+        8.0 * (1.0 - 2.0 * np.random.default_rng(1).integers(
+            0, 2, (1, 4096, 2)
+        )), jnp.float32
+    )
+    with pytest.raises(MetricOverflowError):
+        dec.decode_batch(big)
+
+
+# -- engine integration ----------------------------------------------------
+
+
+def _frames(seed=7, n_frames=8, ebn0=6.5):
+    code = get_code("ccsds-k7")
+    _, llrs = sim_frame_batch(
+        jax.random.PRNGKey(seed), code, n_frames, 120, ebn0
+    )
+    return np.asarray(llrs)
+
+
+def test_engine_invalid_input_fails_only_offender():
+    """A NaN request fails with the typed error at submit; requests
+    sharing its batch are untouched."""
+    llrs = _frames()
+    bad = llrs[0].copy()
+    bad[5, 0] = np.nan
+    eng = DecodeEngine(max_batch=4)
+    t_bad = eng.submit(
+        DecodeRequest(llrs=bad, code="ccsds-k7", flushed=True), now=0.0
+    )
+    assert t_bad.done and t_bad.error == "invalid_input:non_finite"
+    t_ok = [eng.submit(DecodeRequest(
+        llrs=llrs[i], code="ccsds-k7", flushed=True
+    ), now=0.0) for i in range(1, 4)]
+    eng.drain(now=0.0)
+    assert all(t.error is None and t.bits is not None for t in t_ok)
+    s = eng.stats()
+    assert s["invalid"] == 1 and s["sanitized"] == 0
+    # shape errors stay plain ValueError (caller bug, not data fault)
+    with pytest.raises(ValueError):
+        eng.submit(DecodeRequest(
+            llrs=np.ones((4, 7), np.float32), code="ccsds-k7"
+        ), now=0.0)
+
+
+def test_engine_sanitize_clamps_and_counts():
+    llrs = _frames()
+    bad = llrs[0].copy()
+    bad[5, 0] = np.nan
+    bad[9, 1] = np.inf
+    eng = DecodeEngine(max_batch=4, sanitize=True)
+    t = eng.submit(
+        DecodeRequest(llrs=bad, code="ccsds-k7", flushed=True), now=0.0
+    )
+    eng.drain(now=0.0)
+    assert t.error is None and t.bits is not None
+    s = eng.stats()
+    assert s["sanitized"] == 2 and s["invalid"] == 0
+
+
+def test_engine_sdc_detected_and_quarantined():
+    """The engine-level §14 loop on one dispatch: a bit_flip chaos event
+    corrupts decoded output, the sampled scrubber flags it, the shadow
+    rung confirms, the ticket fails typed, the attributed device is
+    quarantined (through the §13 failover path) and logged; clean
+    frames in the same dispatch are emitted bit-identical."""
+    llrs = _frames()
+
+    def run(chaos=None, scrub=1.0):
+        eng = DecodeEngine(max_batch=8, scrub=scrub, chaos=chaos)
+        ts = [eng.submit(DecodeRequest(
+            llrs=llrs[i], code="ccsds-k7", flushed=True
+        ), now=0.0) for i in range(8)]
+        eng.drain(now=0.0)
+        return eng, ts
+
+    _, ref = run(scrub=0.0)
+    ref_bits = [t.bits.copy() for t in ref]
+    inj = ChaosInjector(ChaosSchedule([
+        FaultEvent(at=0, kind="bit_flip", device=3, flips=3),
+    ]))
+    eng, ts = run(chaos=inj)
+    assert inj.injected["bit_flip"] == 1
+    detected = [i for i, t in enumerate(ts) if t.error == "sdc_detected"]
+    assert detected, "corruption not detected"
+    for i, t in enumerate(ts):
+        if i in detected:
+            assert t.bits is None
+        else:
+            np.testing.assert_array_equal(t.bits, ref_bits[i])
+    s = eng.stats()
+    assert s["scrub"]["confirmed"] == len(detected)
+    assert s["scrub"]["false_alarms"] == 0
+    assert s["scrub"]["shadow_dispatches"] >= 1
+    assert s["quarantined"] == [3] and s["failovers"] >= 1
+    assert len(eng.quarantine_log) == 1
+    rec = eng.quarantine_log[0]
+    assert rec.device == 3 and rec.code == "ccsds-k7"
+    assert rec.frames_confirmed == len(detected)
+    # requests counter: completed excludes the detected frames
+    comp = eng.registry.counter("engine_requests_total", "").total(
+        event="completed"
+    )
+    assert comp == 8 - len(detected)
+
+
+def test_engine_scrub_stats_additive():
+    """§14 keys are additive on the §10/§12/§13 stats schema, and an
+    unscrubbed engine reports them all-zero."""
+    eng = DecodeEngine()
+    s = eng.stats()
+    for k in ("scrub", "quarantined", "invalid", "sanitized"):
+        assert k in s
+    assert s["scrub"]["rate"] == 0.0 and s["scrub"]["sampled"] == 0
+    assert s["quarantined"] == [] and s["invalid"] == 0
+    assert s["sanitized"] == 0
+    # pre-§14 keys undisturbed
+    for k in ("faults", "retries", "degraded", "failovers", "occupancy",
+              "batches"):
+        assert k in s
+    # numeric scrub shorthand builds the scrubber
+    assert DecodeEngine(scrub=0.25).scrub.rate == 0.25
+    assert DecodeEngine(scrub=SdcScrubber(rate=0.5)).scrub.rate == 0.5
