@@ -56,13 +56,16 @@ def bench(n_frames: int = 1024, n_stages: int = 256, iters: int = 5):
         for _ in range(iters):
             run()
         dt = (time.perf_counter() - t0) / iters
-        # fused matmul dims per sequential step
+        # fused matmul dims per sequential step; Mb/s counts decoded
+        # message bits so run.py lifts tokens_per_s like every suite
         w = tables.fused_w
+        mbps = n_frames * n_stages / dt / 1e6
         rows.append(
             (
                 f"radix/rho={rho}",
                 dt * 1e6,
-                f"steps={n_stages//rho};matmul={n_frames}x{w.shape[0]}x{w.shape[1]}",
+                f"{mbps:.1f}Mb/s-cpu;steps={n_stages//rho};"
+                f"matmul={n_frames}x{w.shape[0]}x{w.shape[1]}",
             )
         )
     return rows

@@ -1,0 +1,97 @@
+"""§15 soft-output cost: hard Viterbi vs BCJR LLRs vs list-Viterbi.
+
+Reproduces: nothing in the source paper (it is hard-output only) — this
+is the DESIGN.md §15 extension's cost sheet.  The interesting ratio is
+soft/hard at equal workload: the BCJR runs the SAME fused-ACS recurrence
+twice (forward + backward) in the log semiring, so its per-call cost
+should sit near 2-3x the hard decode, and list-L multiplies the state
+dimension by L.  Invocation:
+
+    PYTHONPATH=src python -m benchmarks.bench_soft
+    PYTHONPATH=src python -m benchmarks.run --only soft
+
+Row naming: ``soft/<variant>``; the derived column carries measured CPU
+Mb/s of MESSAGE bits (lifted to tokens_per_s in BENCH_soft.json) plus
+the hard-baseline ratio on the soft rows.  CPU wall-times are NOT TPU
+predictions (see bench_throughput's caveat).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CODE_K7_CCSDS
+from repro.core.decoder import ViterbiDecoder
+
+
+def _time(fn, iters):
+    out = fn()
+    jax.block_until_ready(out)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def bench(
+    n_frames: int = 256, n_stages: int = 512, iters: int = 3,
+    n_list: int = 4,
+):
+    spec = CODE_K7_CCSDS
+    key = jax.random.PRNGKey(0)
+    llrs = jax.random.normal(key, (n_frames, n_stages, spec.beta))
+    dec = ViterbiDecoder(spec)
+    kdec = ViterbiDecoder(spec, use_kernel=True)
+    bits = n_frames * n_stages
+
+    variants = [
+        ("soft/hard-viterbi", lambda: dec.decode_batch(llrs), ""),
+        ("soft/bcjr-llr", lambda: dec.decode_soft(llrs, output="llr"), ""),
+        (
+            "soft/bcjr-llr-kernel",
+            lambda: kdec.decode_soft(llrs, output="llr"),
+            "pallas",
+        ),
+        (
+            f"soft/list-L{n_list}",
+            lambda: dec.decode_soft(llrs, output="list", n_list=n_list),
+            f"L={n_list}",
+        ),
+    ]
+    rows = []
+    hard_dt = None
+    for name, fn, note in variants:
+        dt = _time(fn, iters)
+        mbps = bits / dt / 1e6
+        ratio = "" if hard_dt is None else f";{dt / hard_dt:.2f}x-hard"
+        if hard_dt is None:
+            hard_dt = dt
+        extra = f";{note}" if note else ""
+        rows.append((name, dt * 1e6, f"{mbps:.1f}Mb/s-cpu{ratio}{extra}"))
+
+    # tail-biting pair: WAVA hard decode vs the exact circular BCJR
+    tdec = ViterbiDecoder.from_standard("lte-tbcc")
+    tb_stages = min(n_stages, 256)  # S^2 circular matrices: keep modest
+    tllrs = jax.random.normal(
+        jax.random.PRNGKey(1), (max(n_frames // 8, 1), tb_stages,
+                                tdec.spec.beta)
+    )
+    tbits = tllrs.shape[0] * tb_stages
+    wava_dt = _time(lambda: tdec.decode_tailbiting(tllrs)[0], iters)
+    circ_dt = _time(lambda: tdec.decode_soft(tllrs, output="llr"), iters)
+    rows.append((
+        "soft/hard-wava", wava_dt * 1e6,
+        f"{tbits / wava_dt / 1e6:.1f}Mb/s-cpu",
+    ))
+    rows.append((
+        "soft/bcjr-circular", circ_dt * 1e6,
+        f"{tbits / circ_dt / 1e6:.1f}Mb/s-cpu;{circ_dt / wava_dt:.2f}x-hard",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

@@ -56,7 +56,12 @@ def bench_modes(
     spec = CODE_K7_CCSDS
     key = jax.random.PRNGKey(1)
     llrs = jax.random.normal(key, (n_streams, stream_len, spec.beta))
-    decoder = ViterbiDecoder(spec, decision_depth=1024)
+    # validate_inputs is a host-side front-door check (§14) — it cannot
+    # run under the jit wrappers below (traced bool), and benchmark
+    # inputs are finite by construction
+    decoder = ViterbiDecoder(
+        spec, decision_depth=1024, validate_inputs=False
+    )
     tcfg = TiledDecoderConfig()
 
     def run_tiled():

@@ -16,6 +16,9 @@ the perf trajectory is tracked across PRs:
                        BER rows for every registry standard (punctured
                        802.11a/DVB-S rates, LTE tail-biting WAVA, GSM)
   * bench_radix      — §V/§VIII-C (radix-2 vs radix-4 Q counts & timing)
+  * bench_soft       — §15 soft-output cost: hard Viterbi vs BCJR LLRs
+                       (XLA + Pallas log semiring) vs list-Viterbi vs
+                       WAVA/circular-BCJR, with soft/hard cost ratios
   * bench_kernel     — Pallas ACS kernels vs oracle + survivor packing
                        + the one-pass HBM bytes-accessed report (§8)
   * bench_latency    — §9 single-stream latency: sequential scan vs
@@ -51,6 +54,15 @@ import sys
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
 _MBPS = re.compile(r"([0-9.]+)Mb/s")
+# §V/§VIII-C radix-suite columns: the paper's Q tensor-op counts, the
+# sequential-steps-per-frame analogue and the fused matmul dims — these
+# rows previously reached the artifact with no lifted fields at all, so
+# the radix trajectory was unrecorded
+_Q = re.compile(r"Q=([0-9.]+)")
+_STEPS = re.compile(r"steps=([0-9]+)")
+_MATMUL = re.compile(r"matmul=([0-9]+)x([0-9]+)x([0-9]+)")
+# §15 soft-suite column: per-variant cost ratio vs the hard baseline
+_XHARD = re.compile(r"([0-9.]+)x-hard")
 _BYTES = re.compile(r"bytes=([0-9]+)")
 _MODELED = re.compile(r"modeled=([0-9.]+)us")
 _DEPTH = re.compile(r"depth=([0-9]+)(?:->([0-9]+))?")
@@ -115,6 +127,20 @@ def _artifact_rows(rows):
         m = _SPEEDUP.search(row["derived"])
         if m:
             row["speedup_modeled"] = float(m.group(1))
+        m = _Q.search(row["derived"])
+        if m:  # paper §V/§VIII tensor ops per stage (16x16 fragments)
+            row["q_per_stage"] = float(m.group(1))
+        m = _STEPS.search(row["derived"])
+        if m:
+            row["seq_steps"] = int(m.group(1))
+        m = _MATMUL.search(row["derived"])
+        if m:
+            row["matmul_m"] = int(m.group(1))
+            row["matmul_k"] = int(m.group(2))
+            row["matmul_n"] = int(m.group(3))
+        m = _XHARD.search(row["derived"])
+        if m:
+            row["vs_hard_ratio"] = float(m.group(1))
         # §10 engine-suite columns: occupancy/waste per load point and
         # per-SLO virtual p50/p99 sojourn in milliseconds
         m = _OCCUPANCY.search(row["derived"])
@@ -263,6 +289,7 @@ def main() -> None:
         bench_latency,
         bench_radix,
         bench_scrub,
+        bench_soft,
         bench_throughput,
         roofline_report,
     )
@@ -294,6 +321,10 @@ def main() -> None:
         "radix": lambda: bench_radix.bench(
             n_frames=256 if args.fast else 1024,
             n_stages=128 if args.fast else 256,
+        ),
+        "soft": lambda: bench_soft.bench(
+            n_frames=64 if args.fast else 256,
+            n_stages=128 if args.fast else 512,
         ),
         "kernel": lambda: bench_kernel.bench(
             n_frames=128 if args.fast else 512,

@@ -550,6 +550,109 @@ class ViterbiDecoder:
             transfer_tile=tp_tile,
         )
 
+    # -- soft output (DESIGN.md §15) --------------------------------------
+
+    def decode_soft(
+        self,
+        llrs: jnp.ndarray,
+        output: str = "llr",
+        n_list: int = 4,
+        initial_state: Optional[int] = 0,
+        final_state: Optional[int] = None,
+        termination: Optional[str] = None,
+    ):
+        """Soft-output decode (DESIGN.md §15).
+
+        llrs as in ``decode_batch`` (punctured serial streams accepted —
+        the re-inserted zero-LLR erasures are information-free in the
+        log semiring too).  ``output`` selects:
+
+          * ``"llr"``  — (F, n) f32 per-bit BCJR LLRs (positive = bit 0,
+            the channel-LLR convention);
+          * ``"bits"`` — (F, n) int32 MAP-per-bit hard decisions
+            (``llr < 0``; may legitimately differ from the ML-sequence
+            ``decode_batch`` decisions near 0 dB);
+          * ``"list"`` — (bits (F, L, n) int32, metrics (F, L) f32)
+            top-``n_list`` list-Viterbi paths, metric-sorted and
+            distinct; L=1 is bit-exact with ``decode_batch``.
+
+        Tail-biting frames route to the exact circular BCJR
+        (llr/bits) or the WAVA list loop (list); initial/final_state
+        are then ignored, like ``decode_batch``.
+        """
+        if output not in ("llr", "bits", "list"):
+            raise ValueError(
+                f"output must be 'llr', 'bits' or 'list', got {output!r}"
+            )
+        term = termination or self.termination
+        llrs = self._harden(self.depunctured(llrs))
+        F, n, _ = llrs.shape
+        if self.validate_inputs and not self.precision.renorm:
+            batch_headroom_check(
+                self.precision,
+                -(-n // self.rho),
+                float(jnp.max(jnp.abs(llrs))) if n else 0.0,
+                self.rho,
+                llrs.shape[2],
+            )
+        if term == "tailbiting":
+            tables = (
+                self.tables if n % self.rho == 0
+                else build_acs_tables(self.spec, 1)
+            )
+            if output == "list":
+                from .soft import wava_list_decode
+
+                _count_dispatch("soft_list")
+                bits, metrics, _ = wava_list_decode(
+                    llrs, tables, n_list, self.precision
+                )
+                return bits, metrics
+            from .soft import bcjr_circular_llrs
+
+            _count_dispatch("soft")
+            out = bcjr_circular_llrs(
+                llrs, tables, self.precision, use_kernel=self.use_kernel
+            )
+            return out if output == "llr" else (out < 0).astype(jnp.int32)
+        pad = (-n) % self.rho
+        if pad:
+            if final_state is not None:
+                raise ValueError(
+                    f"final_state requires n divisible by rho={self.rho}; "
+                    f"got n={n} (the pin would land on padded stages)"
+                )
+            llrs = jnp.pad(llrs, ((0, 0), (0, pad), (0, 0)))
+        if output == "list":
+            from .soft import list_decode
+
+            _count_dispatch("soft_list")
+            bits, metrics = list_decode(
+                llrs,
+                self.spec,
+                n_list=n_list,
+                rho=self.rho,
+                initial_state=initial_state,
+                final_state=final_state,
+                precision=self.precision,
+            )
+            return (bits[:, :, :n] if pad else bits), metrics
+        from .soft import bcjr_llrs
+
+        _count_dispatch("soft")
+        out = bcjr_llrs(
+            llrs,
+            self.spec,
+            rho=self.rho,
+            initial_state=initial_state,
+            final_state=final_state,
+            precision=self.precision,
+            transfer_tile=self.transfer_tile,
+            use_kernel=self.use_kernel,
+        )
+        out = out[:, :n] if pad else out
+        return out if output == "llr" else (out < 0).astype(jnp.int32)
+
     # -- tiled stream (stateless, latency-optimal) ------------------------
 
     def default_tiled_config(

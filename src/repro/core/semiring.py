@@ -1,0 +1,101 @@
+"""Semiring abstraction over the fused ACS recurrence (DESIGN.md §15).
+
+The matrix-form forward pass (DESIGN.md §2) and the §9 transfer-matrix
+composition are *semiring* computations: branch accumulation is the
+semiring product (always ``+`` on log-domain scores) and the slot/inner
+reduction is the semiring sum.  Two instances cover the decode
+semantics this repo ships:
+
+  * ``TROPICAL``  — max-plus: sum = max.  Hard-decision Viterbi; the
+    bit-exact default everywhere.
+  * ``LOGPROB``   — log-sum-exp: sum = logsumexp.  BCJR/MAP forward-
+    backward posteriors (``core/soft.py``), evaluated max-normalized
+    (m + log sum exp(x - m)) so the accumulator never overflows even
+    with f16/bf16 carries.
+
+Both share the additive identity ``NEG`` (the -1e9 off-trellis score —
+a finite stand-in for -inf that keeps arithmetic NaN-free) and the
+multiplicative identity 0.  Everything downstream of the potentials
+matmul is parameterized on a ``Semiring`` value: the instances are
+frozen, hashable dataclasses so they ride through ``jax.jit``
+static_argnames unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["NEG", "Semiring", "TROPICAL", "LOGPROB", "get_semiring"]
+
+NEG = jnp.float32(-1.0e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A commutative semiring on log-domain f32 scores.
+
+    ``prod`` is ``+`` for both instances (log-domain), so the §2 fused
+    potentials matmul — branch metric plus routed path metric — is
+    semiring-agnostic; only the reductions (``sum``) differ.
+    """
+
+    name: str  # "tropical" | "logprob" — also the kernel-side selector
+
+    @property
+    def zero(self) -> jnp.ndarray:
+        """Additive identity (absorbing for prod): the off-trellis score."""
+        return NEG
+
+    @property
+    def one(self) -> float:
+        """Multiplicative identity: a zero log-score."""
+        return 0.0
+
+    def sum(self, x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+        """Semiring sum-reduce along ``axis``: max, or max-normalized
+        logsumexp (the §15 overflow-safe accumulator form)."""
+        m = jnp.max(x, axis=axis)
+        if self.name == "tropical":
+            return m
+        return m + jnp.log(
+            jnp.sum(jnp.exp(x - jnp.expand_dims(m, axis)), axis=axis)
+        )
+
+    def prod(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Semiring product: log-domain score accumulation."""
+        return a + b
+
+    def matmul(
+        self, a: jnp.ndarray, b: jnp.ndarray, matmul_dtype=jnp.float32
+    ) -> jnp.ndarray:
+        """Semiring compose  C[..., i, j] = sum_k A[..., i, k] * B[..., k, j].
+
+        Operands are quantized to ``matmul_dtype`` (mirroring the MXU
+        input dtype of the §2 fused step) and accumulated in f32.  For
+        ``TROPICAL`` this is bit-identical to the historical
+        ``timeparallel.tropical_matmul``.
+        """
+        a = a.astype(matmul_dtype).astype(jnp.float32)
+        b = b.astype(matmul_dtype).astype(jnp.float32)
+        return self.sum(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+    def identity(self, n: int) -> jnp.ndarray:
+        """The (n, n) unit matrix: ``one`` on the diagonal, ``zero`` off."""
+        return jnp.where(jnp.eye(n, dtype=bool), jnp.float32(0.0), NEG)
+
+
+TROPICAL = Semiring("tropical")
+LOGPROB = Semiring("logprob")
+
+_BY_NAME = {"tropical": TROPICAL, "logprob": LOGPROB}
+
+
+def get_semiring(name: str) -> Semiring:
+    """Resolve a semiring by its kernel-side string name."""
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown semiring {name!r}; expected one of {sorted(_BY_NAME)}"
+        ) from None

@@ -1,0 +1,492 @@
+"""Soft-output decoding (DESIGN.md §15): BCJR per-bit LLRs and top-L
+list-Viterbi, both built on the semiring-generalized fused ACS.
+
+**BCJR = the §2/§9 recurrences in the LOGPROB semiring.**  With channel
+LLRs lambda scaled to true branch log-likelihoods (theta . lambda / 2),
+the forward alpha recursion is ``forward_fused`` at LOGPROB and the
+backward beta recursion is the SAME fused-matmul shape on the
+time-reversed tables (``trellis.build_reverse_tables``).  The key
+structural fact of this trellis family: the rho input bits of step t
+are a function of the ARRIVAL state j at boundary t+1 alone
+(``tables.dec_bits``), so per-bit posteriors need only the boundary
+joints  joint_{t+1}[j] = alpha_{t+1}[j] + beta_{t+1}[j]  and
+
+    LLR[t, b] = lse_{j: bit_b(j)=0} joint  -  lse_{j: bit_b(j)=1} joint.
+
+The open-trellis path reuses the §9 machinery wholesale: LOGPROB tile
+transfer matrices, a forward associative scan for tile-entry alphas, a
+REVERSE associative scan (flipped compose) for tile suffix products ->
+tile-end betas, then within-tile forward/backward scans fill in the
+per-step boundaries — log-depth across tiles, tile-depth within.
+Tail-biting frames get the EXACT circular BCJR: per-stage matrices,
+prefix/suffix scans and the diagonal contraction
+joint_{t+1}[j] = lse_s(P_t[s, j] + S_{t+1}[j, s]), which sums every
+circular codeword through all boundary states — exactly what the
+exhaustive oracle (tests/oracle.py) computes by enumeration.
+
+Every per-step renorm / per-tile normalization is a per-(frame,
+boundary) constant and cancels in the LLR difference, so the §14
+overflow story carries over unchanged.
+
+**List-Viterbi** (``list_decode``) is the rank-augmented parallel LVA:
+the metric carry grows a rank axis (F, S, L) which is folded into the
+matmul batch so candidates come from the SAME ``fused_potentials`` op
+the hard decode runs — at L=1 the arrays are numerically identical and
+``lax.top_k``'s stable tie-break reproduces ``argmax``, so L=1 is
+bit-exact with ``decode_batch`` by construction.  Survivors store the
+candidate index (prev-rank * R + slot); traceback walks (state, rank)
+chains, yielding distinct, metric-sorted paths.  ``wava_list_decode``
+replays the §7 WAVA loop over the list forward for tail-biting frames.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel_geometry import pick_transfer_tile
+from .semiring import LOGPROB, NEG
+from .timeparallel import entry_from_prefix, tiled_blocks, transfer_matrices
+from .trellis import (
+    AcsTables,
+    CodeSpec,
+    ReverseTables,
+    build_acs_tables,
+    build_reverse_tables,
+)
+from .viterbi import AcsPrecision, blocks_from_llrs, fused_potentials, init_metric
+
+__all__ = [
+    "bcjr_llrs",
+    "bcjr_circular_llrs",
+    "list_decode",
+    "list_forward",
+    "list_traceback",
+    "init_list_metric",
+    "wava_list_decode",
+]
+
+
+# ---------------------------------------------------------------------------
+# BCJR forward-backward (open trellis, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def _end_metric(
+    n_frames: int, n_states: int, final_state: Optional[int]
+) -> jnp.ndarray:
+    """beta at the stream end: one-hot (pinned terminal) or uniform."""
+    return init_metric(n_frames, n_states, final_state)
+
+
+def _alpha_scan(blocks, lam0, tables: AcsTables, precision: AcsPrecision):
+    """LOGPROB forward collecting alphas at EVERY boundary: (T, rows, S).
+    Same step as ``forward_fused`` (same potentials op, same renorm /
+    carry-cast chain) but emitting the metric instead of survivors."""
+    W = jnp.asarray(tables.fused_w, precision.matmul_dtype)
+    W_theta = jnp.asarray(tables.theta_t, precision.matmul_dtype)
+    W_pred = jnp.asarray(tables.pred_onehot, jnp.float32)
+    S, R = tables.n_states, tables.n_slots
+
+    def step(lam, l_t):
+        pot = fused_potentials(l_t, lam, W, W_theta, W_pred, precision)
+        new = LOGPROB.sum(pot.reshape(lam.shape[0], S, R), axis=-1)
+        if precision.renorm:
+            new = new - jnp.max(new, axis=-1, keepdims=True)
+        new = new.astype(precision.carry_dtype)
+        return new, new.astype(jnp.float32)
+
+    _, alphas = jax.lax.scan(
+        step, lam0.astype(precision.carry_dtype), blocks
+    )
+    return alphas
+
+
+def _beta_scan(blocks, beta_end, rev: ReverseTables, precision: AcsPrecision):
+    """LOGPROB backward collecting betas at every boundary 1..T:
+    out[t] = beta at boundary t+1, (T, rows, S); out[T-1] = beta_end.
+    The backward step is the forward fused-matmul shape on the reversed
+    tables: beta_t[i] = lse_v( branch(i, v) + beta_{t+1}[succ(i, v)] )."""
+    W = jnp.asarray(rev.fused_w, precision.matmul_dtype)
+    W_theta = jnp.asarray(rev.theta_rev, precision.matmul_dtype)
+    W_succ = jnp.asarray(rev.succ_onehot, jnp.float32)
+    S, R = rev.n_states, rev.n_slots
+
+    def step(beta, l_t):
+        pot = fused_potentials(l_t, beta, W, W_theta, W_succ, precision)
+        new = LOGPROB.sum(pot.reshape(beta.shape[0], S, R), axis=-1)
+        if precision.renorm:
+            new = new - jnp.max(new, axis=-1, keepdims=True)
+        new = new.astype(precision.carry_dtype)
+        return new, new.astype(jnp.float32)
+
+    # reverse scan over steps 1..T-1: processing block t yields the beta
+    # at boundary t, recorded at ys[t-1]; boundary T is beta_end itself
+    _, ys = jax.lax.scan(
+        step,
+        beta_end.astype(precision.carry_dtype),
+        blocks[1:],
+        reverse=True,
+    )
+    return jnp.concatenate(
+        [ys, beta_end.astype(jnp.float32)[None]], axis=0
+    )
+
+
+def _llrs_from_joints(joint: jnp.ndarray, tables: AcsTables) -> jnp.ndarray:
+    """joint (T, F, S) boundary log-posteriors -> LLRs (F, T*rho).
+
+    The rho bits of step t are dec_bits(arrival state at boundary t+1),
+    chronological — mask the joint by bit value and logsumexp over j.
+    """
+    dec = jnp.asarray(tables.dec_bits)  # (S, rho)
+    jt = joint[:, :, None, :]  # (T, F, 1, S)
+    mask = dec.T[None, None]  # (1, 1, rho, S)
+    pos = LOGPROB.sum(jnp.where(mask == 0, jt, NEG), axis=-1)
+    neg = LOGPROB.sum(jnp.where(mask == 1, jt, NEG), axis=-1)
+    llr = pos - neg  # (T, F, rho)
+    F = joint.shape[1]
+    return jnp.transpose(llr, (1, 0, 2)).reshape(F, -1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tables", "rev", "precision", "transfer_tile", "use_kernel",
+    ),
+)
+def _bcjr_joints(
+    blocks: jnp.ndarray,  # (T', F, B) HALF-SCALED channel scores
+    lam0: jnp.ndarray,  # (F, S) alpha at boundary 0
+    beta_end: jnp.ndarray,  # (F, S) beta at boundary T'
+    tables: AcsTables,
+    rev: ReverseTables,
+    precision: AcsPrecision,
+    transfer_tile: int,
+    use_kernel: bool,
+) -> jnp.ndarray:
+    """Boundary joints alpha+beta at boundaries 1..T': (T', F, S).
+
+    Blocked §9 formulation: LOGPROB tile transfer matrices + forward/
+    reverse associative scans give tile-boundary alphas/betas in log
+    depth; within-tile scans (tiles folded into the frame axis) fill in
+    the per-step boundaries at tile depth.
+    """
+    T, F, B = blocks.shape
+    S = tables.n_states
+    tt = transfer_tile
+    n_tiles = T // tt
+    compose = functools.partial(
+        LOGPROB.matmul, matmul_dtype=precision.matmul_dtype
+    )
+    m = transfer_matrices(
+        blocks, tables, precision, tt, use_kernel=use_kernel,
+        semiring=LOGPROB,
+    )  # (N, F, S, S)
+    prefix = jax.lax.associative_scan(compose, m, axis=0)
+    entry = entry_from_prefix(prefix, lam0, LOGPROB)  # (N, F, S) tile alphas
+
+    def compose_flip(a, b):  # reverse scan: keep products in stream order
+        return LOGPROB.matmul(b, a, matmul_dtype=precision.matmul_dtype)
+
+    suffix = jax.lax.associative_scan(compose_flip, m, axis=0, reverse=True)
+    # beta at the START of tile p: suffix_p composed into the end metric
+    beta_start = LOGPROB.sum(
+        suffix + beta_end[None, :, None, :], axis=-1
+    )  # (N, F, S)
+    beta_tile_end = jnp.concatenate(
+        [beta_start[1:], beta_end[None]], axis=0
+    )  # (N, F, S)
+
+    tiles = tiled_blocks(
+        blocks.astype(precision.channel_dtype), tt
+    ).reshape(tt, n_tiles * F, B)
+    alphas = _alpha_scan(
+        tiles, entry.reshape(n_tiles * F, S), tables, precision
+    )
+    betas = _beta_scan(
+        tiles, beta_tile_end.reshape(n_tiles * F, S), rev, precision
+    )
+    joint = (alphas + betas).reshape(tt, n_tiles, F, S)
+    return jnp.transpose(joint, (1, 0, 2, 3)).reshape(T, F, S)
+
+
+def bcjr_llrs(
+    llrs: jnp.ndarray,  # (F, n, beta) channel LLRs
+    spec: CodeSpec,
+    rho: int = 2,
+    initial_state: Optional[int] = 0,
+    final_state: Optional[int] = None,
+    precision: AcsPrecision = AcsPrecision(),
+    transfer_tile: Optional[int] = None,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Per-bit BCJR LLRs (F, n) f32 for open (non-circular) frames.
+
+    Positive = bit 0 more likely (the hard decision is ``llr < 0``, the
+    same convention as the channel LLR input).  Exact per-bit posteriors
+    under the channel model the LLRs came from — matches the exhaustive
+    oracle on small codes (tests/test_soft.py).
+    """
+    llrs = jnp.asarray(llrs)
+    tables = build_acs_tables(spec, rho)
+    rev = build_reverse_tables(spec, rho)
+    # theta . lambda is TWICE the branch log-likelihood (up to a per-bit
+    # constant): scale once so alpha/beta are true log-domain scores
+    blocks = blocks_from_llrs(llrs, rho) * jnp.float32(0.5)
+    F = llrs.shape[0]
+    tt = pick_transfer_tile(blocks.shape[0], transfer_tile)
+    lam0 = init_metric(F, spec.n_states, initial_state)
+    beta_end = _end_metric(F, spec.n_states, final_state)
+    joint = _bcjr_joints(
+        blocks, lam0, beta_end, tables, rev, precision, tt, use_kernel
+    )
+    return _llrs_from_joints(joint, tables)
+
+
+# ---------------------------------------------------------------------------
+# Exact circular BCJR (tail-biting, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tables", "precision", "use_kernel")
+)
+def _bcjr_circular_joints(
+    blocks: jnp.ndarray,  # (T', F, B) HALF-SCALED channel scores
+    tables: AcsTables,
+    precision: AcsPrecision,
+    use_kernel: bool,
+) -> jnp.ndarray:
+    """Boundary joints (T', F, S) of the EXACT tail-biting posterior.
+
+    Per-stage LOGPROB matrices A_t, inclusive prefixes P_t = A_0 o..o A_t
+    and shifted suffixes S_{t+1} = A_{t+1} o..o A_{T'-1}; every circular
+    input sequence enters boundary state s and returns to s, so
+
+        joint_{t+1}[j] = lse_s ( P_t[s, j] + S_{t+1}[j, s] )
+
+    sums ALL 2^n codewords grouped by their boundary state — the exact
+    quantity the exhaustive oracle enumerates.  Memory is T'*F*S^2 per
+    scan: fine for TBCC-length frames (the only circular codes served).
+    """
+    T, F, B = blocks.shape
+    S = tables.n_states
+    compose = functools.partial(
+        LOGPROB.matmul, matmul_dtype=precision.matmul_dtype
+    )
+    a = transfer_matrices(
+        blocks, tables, precision, transfer_tile=1, use_kernel=use_kernel,
+        semiring=LOGPROB,
+    )  # (T', F, S, S) per-stage matrices
+    prefix = jax.lax.associative_scan(compose, a, axis=0)
+
+    def compose_flip(x, y):
+        return LOGPROB.matmul(y, x, matmul_dtype=precision.matmul_dtype)
+
+    suffix = jax.lax.associative_scan(compose_flip, a, axis=0, reverse=True)
+    ident = jnp.broadcast_to(LOGPROB.identity(S), (1, F, S, S))
+    suffix_next = jnp.concatenate([suffix[1:], ident], axis=0)
+    # joint[t][f, j] = lse_s prefix[t][f, s, j] + suffix_next[t][f, j, s]
+    return LOGPROB.sum(
+        jnp.transpose(prefix, (0, 1, 3, 2)) + suffix_next, axis=-1
+    )
+
+
+def bcjr_circular_llrs(
+    llrs: jnp.ndarray,  # (F, n, beta) channel LLRs
+    tables: AcsTables,
+    precision: AcsPrecision = AcsPrecision(),
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Per-bit LLRs (F, n) f32 of the exact tail-biting posterior."""
+    llrs = jnp.asarray(llrs)
+    if llrs.shape[1] % tables.rho:
+        raise ValueError(
+            f"tail-biting frame length n={llrs.shape[1]} not divisible "
+            f"by rho={tables.rho}; use rho=1 tables for odd lengths"
+        )
+    blocks = blocks_from_llrs(llrs, tables.rho) * jnp.float32(0.5)
+    joint = _bcjr_circular_joints(blocks, tables, precision, use_kernel)
+    return _llrs_from_joints(joint, tables)
+
+
+# ---------------------------------------------------------------------------
+# Top-L list-Viterbi (rank-augmented parallel LVA, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def init_list_metric(lam0: jnp.ndarray, n_list: int) -> jnp.ndarray:
+    """(F, S) -> (F, S, L): rank 0 carries lam0, ranks > 0 are empty."""
+    lamL = jnp.full(lam0.shape + (n_list,), NEG, jnp.float32)
+    return lamL.at[:, :, 0].set(lam0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tables", "precision", "n_list")
+)
+def list_forward(
+    blocks: jnp.ndarray,  # (T', F, B)
+    lam0: jnp.ndarray,  # (F, S, L)
+    tables: AcsTables,
+    precision: AcsPrecision = AcsPrecision(),
+    n_list: int = 4,
+):
+    """Rank-augmented fused forward.  Returns (lam (F, S, L) f32, phis
+    (T', F, S, L) int32 candidate codes = prev_rank * R + slot).
+
+    The rank axis folds into the matmul batch, so the potentials come
+    from the SAME ``fused_potentials`` op as the hard forward — at L=1
+    the candidate array IS ``forward_fused``'s potentials and the
+    stable ``top_k`` tie-break reproduces ``argmax``: bit-exact by
+    construction.  Renorm subtracts the per-frame max over (S, L) (one
+    shared shift; at L=1 identical to the hard path's per-frame max).
+    """
+    W = jnp.asarray(tables.fused_w, precision.matmul_dtype)
+    W_theta = jnp.asarray(tables.theta_t, precision.matmul_dtype)
+    W_pred = jnp.asarray(tables.pred_onehot, jnp.float32)
+    S, R = tables.n_states, tables.n_slots
+    L = n_list
+    F = lam0.shape[0]
+    B = tables.llr_block
+    blocks = blocks.astype(precision.channel_dtype)
+
+    def step(lam, l_t):  # lam (F, S, L)
+        lam_rows = jnp.transpose(lam, (2, 0, 1)).reshape(L * F, S)
+        l_rows = jnp.broadcast_to(l_t[None], (L,) + l_t.shape).reshape(
+            L * F, B
+        )
+        pot = fused_potentials(
+            l_rows, lam_rows, W, W_theta, W_pred, precision
+        )  # (L*F, S*R)
+        cand = jnp.transpose(
+            pot.reshape(L, F, S, R), (1, 2, 0, 3)
+        ).reshape(F, S, L * R)  # candidate c = prev_rank * R + slot
+        new_lam, code = jax.lax.top_k(cand, L)  # (F, S, L)
+        if precision.renorm:
+            new_lam = new_lam - jnp.max(
+                new_lam.reshape(F, S * L), axis=-1
+            )[:, None, None]
+        new_lam = new_lam.astype(precision.carry_dtype)
+        return new_lam, code.astype(jnp.int32)
+
+    lam_fin, phis = jax.lax.scan(
+        step, lam0.astype(precision.carry_dtype), blocks
+    )
+    return lam_fin.astype(jnp.float32), phis
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tables", "n_list", "final_state")
+)
+def list_traceback(
+    phis: jnp.ndarray,  # (T', F, S, L) int32 candidate codes
+    lam: jnp.ndarray,  # (F, S, L) f32 final metrics
+    tables: AcsTables,
+    n_list: int,
+    final_state: Optional[int] = None,
+):
+    """Trace the L best (state, rank) chains.  Returns (bits (F, L,
+    T'*rho) int32 metric-sorted, metrics (F, L) f32, start (F, L) int32
+    path start states — the tail-biting consistency probe).
+
+    Paths are distinct by induction: two chains that first diverge at
+    rank resolution carry different (prev_rank, slot) codes there, and
+    distinct slots at equal states mean different predecessor states.
+    """
+    T, F, S, L = phis.shape
+    k, rho, R = tables.spec.k, tables.rho, tables.n_slots
+    mask = (1 << (k - 1 - rho)) - 1
+    if final_state is None:
+        metrics, flat = jax.lax.top_k(lam.reshape(F, S * L), n_list)
+        j0 = (flat // L).astype(jnp.int32)
+        l0 = (flat % L).astype(jnp.int32)
+    else:
+        metrics, l0 = jax.lax.top_k(lam[:, final_state, :], n_list)
+        l0 = l0.astype(jnp.int32)
+        j0 = jnp.full((F, n_list), final_state, jnp.int32)
+
+    def step(carry, phi_t):
+        j, l = carry  # (F, L) state / rank of each listed path
+        code = jnp.take_along_axis(
+            phi_t.reshape(F, S * L), j * L + l, axis=1
+        )  # (F, L)
+        v = j >> (k - 1 - rho)  # the rho decoded bits of this step
+        pred = ((j & mask) << rho) | (code % R)
+        return (pred, code // R), v
+
+    (start, _), vs = jax.lax.scan(step, (j0, l0), phis, reverse=True)
+    bits = (vs[..., None] >> jnp.arange(rho)) & 1  # (T, F, L, rho)
+    bits = jnp.transpose(bits, (1, 2, 0, 3)).reshape(F, n_list, T * rho)
+    return bits.astype(jnp.int32), metrics, start
+
+
+def list_decode(
+    llrs: jnp.ndarray,  # (F, n, beta)
+    spec: CodeSpec,
+    n_list: int = 4,
+    rho: int = 2,
+    initial_state: Optional[int] = 0,
+    final_state: Optional[int] = None,
+    precision: AcsPrecision = AcsPrecision(),
+):
+    """Top-L list decode of open frames.  Returns (bits (F, L, n) int32,
+    metrics (F, L) f32) — paths metric-sorted, distinct; L=1 bit-exact
+    with the hard decode (``decode_frames`` / ``decode_batch``)."""
+    llrs = jnp.asarray(llrs)
+    tables = build_acs_tables(spec, rho)
+    blocks = blocks_from_llrs(llrs, rho)
+    lam0 = init_list_metric(
+        init_metric(llrs.shape[0], spec.n_states, initial_state), n_list
+    )
+    lam, phis = list_forward(blocks, lam0, tables, precision, n_list)
+    bits, metrics, _ = list_traceback(
+        phis, lam, tables, n_list, final_state
+    )
+    return bits, metrics
+
+
+def wava_list_decode(
+    llrs: jnp.ndarray,  # (F, n, beta)
+    tables: AcsTables,
+    n_list: int = 4,
+    precision: Optional[AcsPrecision] = None,
+    max_iters: int = 4,
+):
+    """Tail-biting top-L list decode: the §7 WAVA loop over the list
+    forward.  Returns (bits (F, L, n), metrics (F, L), converged (F,)).
+    Identical circulation/freeze bookkeeping to ``wava_decode`` — at
+    L=1 the rank-0 path is bit-exact with it.
+    """
+    precision = precision or AcsPrecision()
+    F, n, beta = llrs.shape
+    if beta != tables.spec.beta:
+        raise ValueError(f"llrs beta={beta} != code beta={tables.spec.beta}")
+    if n % tables.rho:
+        raise ValueError(
+            f"tail-biting frame length n={n} not divisible by "
+            f"rho={tables.rho}; use rho=1 tables for odd lengths"
+        )
+    blocks = blocks_from_llrs(jnp.asarray(llrs), tables.rho)
+    lam = init_list_metric(
+        init_metric(F, tables.n_states, None), n_list
+    )  # uniform boundary prior at rank 0
+    done = jnp.zeros(F, dtype=bool)
+    out = jnp.zeros((F, n_list, n), dtype=jnp.int32)
+    out_metrics = jnp.zeros((F, n_list), dtype=jnp.float32)
+    for _ in range(max_iters):
+        lam, phis = list_forward(blocks, lam, tables, precision, n_list)
+        bits, metrics, start = list_traceback(
+            phis, lam, tables, n_list, None
+        )
+        # consistency on the best path, like wava_decode's argmax probe
+        fs = jnp.argmax(
+            jnp.max(lam, axis=-1), axis=-1
+        ).astype(jnp.int32)
+        consistent = start[:, 0] == fs
+        out = jnp.where(done[:, None, None], out, bits)
+        out_metrics = jnp.where(done[:, None], out_metrics, metrics)
+        done = done | consistent
+    return out, out_metrics, done

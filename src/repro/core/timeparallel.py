@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel_geometry import pick_transfer_tile
+from .semiring import TROPICAL, Semiring
 from .trellis import AcsTables, CodeSpec, build_acs_tables
 from .viterbi import (
     NEG,
@@ -81,15 +82,16 @@ def tropical_matmul(
 
     Operands are quantized to ``matmul_dtype`` (mirroring the MXU input
     dtype of the §2 fused step) and accumulated in f32 — the broadcasted
-    add + reduce-max is the VPU's dense-matmul analogue.
+    add + reduce-max is the VPU's dense-matmul analogue.  Now a thin
+    alias of ``Semiring.matmul`` at TROPICAL (DESIGN.md §15), kept for
+    the historical call sites; bit-identical to the pre-semiring code.
     """
-    a = a.astype(matmul_dtype).astype(jnp.float32)
-    b = b.astype(matmul_dtype).astype(jnp.float32)
-    return jnp.max(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+    return TROPICAL.matmul(a, b, matmul_dtype)
 
 
 def tropical_identity(n_states: int) -> jnp.ndarray:
-    """The tropical unit matrix: 0 on the diagonal, -inf elsewhere."""
+    """The tropical unit matrix: 0 on the diagonal, -inf elsewhere.
+    (Shared by both semirings — see ``Semiring.identity``.)"""
     return jnp.where(
         jnp.eye(n_states, dtype=bool), jnp.float32(0.0), NEG
     )
@@ -112,24 +114,27 @@ def transfer_matrices(
     precision: AcsPrecision = AcsPrecision(),
     transfer_tile: int = None,
     use_kernel: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> jnp.ndarray:
-    """Per-tile tropical transfer matrices M (N, F, S, S) (DESIGN.md §9).
+    """Per-tile semiring transfer matrices M (N, F, S, S) (DESIGN.md §9).
 
-    M[n, f, i, j] = best path metric entering tile n in state i and
-    leaving in state j, normalized per (n, f) by its max entry (a
-    per-frame-tile constant, invisible to every argmax downstream) so
-    scanned products stay bounded however long the stream.  Formation
-    runs the §2 fused step with the entry axis folded into the matmul
-    batch; ``use_kernel`` routes it through the Pallas kernel
-    (``kernels.viterbi_acs.transfer_matrix_pallas``) which keeps the
-    matrix carry in VMEM.
+    M[n, f, i, j] = best path metric (TROPICAL) or total log-score
+    (LOGPROB, DESIGN.md §15) entering tile n in state i and leaving in
+    state j, normalized per (n, f) by its max entry (a per-frame-tile
+    constant, invisible to every argmax downstream and cancelled
+    per-boundary in BCJR LLRs) so scanned products stay bounded however
+    long the stream.  Formation runs the §2 fused step with the entry
+    axis folded into the matmul batch; ``use_kernel`` routes it through
+    the Pallas kernel (``kernels.viterbi_acs.transfer_matrix_pallas``)
+    which keeps the matrix carry in VMEM.
     """
     transfer_tile = transfer_tile or pick_transfer_tile(blocks.shape[0])
     if use_kernel:  # pragma: no cover - exercised via kernels tests
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.viterbi_transfer_matrices(
-            blocks, tables, precision, transfer_tile=transfer_tile
+            blocks, tables, precision, transfer_tile=transfer_tile,
+            semiring=semiring.name,
         )
     T, F, B = blocks.shape
     S, R = tables.n_states, tables.n_slots
@@ -151,7 +156,7 @@ def transfer_matrices(
             l_t[:, :, None, :], (n_tiles, F, S, B)
         ).reshape(rows, B)
         pot = fused_potentials(l, lam, W, W_theta, W_pred, precision)
-        new = jnp.max(pot.reshape(rows, S, R), axis=-1)
+        new = semiring.sum(pot.reshape(rows, S, R), axis=-1)
         # no per-row renorm here: a per-ENTRY-state offset would change
         # the tropical products; the per-(tile, frame) normalization
         # below is the semantics-preserving analogue
@@ -166,26 +171,28 @@ def prefix_entry_metrics(
     m: jnp.ndarray,  # (N, F, S, S) tile transfer matrices
     lam0: jnp.ndarray,  # (F, S) stream-entry metrics
     matmul_dtype=jnp.float32,
+    semiring: Semiring = TROPICAL,
 ) -> jnp.ndarray:
     """Entry metric of every tile, (N, F, S), in O(log2 N) compose depth:
     entry_0 = lam0 and entry_p = lam0 (x) (M_0 o ... o M_{p-1}) via one
-    ``associative_scan`` over the tropical matmul.  Equal to the
+    ``associative_scan`` over the semiring matmul.  Equal to the
     sequential scan's metric at each tile boundary up to a per-frame
     constant and float associativity (asserted in
     tests/test_timeparallel.py)."""
-    compose = functools.partial(tropical_matmul, matmul_dtype=matmul_dtype)
+    compose = functools.partial(semiring.matmul, matmul_dtype=matmul_dtype)
     prefix = jax.lax.associative_scan(compose, m, axis=0)
-    return entry_from_prefix(prefix, lam0)
+    return entry_from_prefix(prefix, lam0, semiring)
 
 
 def entry_from_prefix(
     prefix: jnp.ndarray,  # (N, F, S, S) INCLUSIVE tile prefix products
     lam0: jnp.ndarray,  # (F, S) metrics entering tile 0
+    semiring: Semiring = TROPICAL,
 ) -> jnp.ndarray:
     """Tile entry metrics (N, F, S) from already-scanned inclusive
     prefix products — the piece the time-sharded decoder reuses (it
     needs the raw prefixes for the device all-gather too)."""
-    heads = jnp.max(lam0[None, :, :, None] + prefix[:-1], axis=-2)
+    heads = semiring.sum(lam0[None, :, :, None] + prefix[:-1], axis=-2)
     return jnp.concatenate([lam0[None], heads], axis=0)
 
 
@@ -213,7 +220,9 @@ def _suffix_to_final(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tables", "precision", "transfer_tile", "use_kernel"),
+    static_argnames=(
+        "tables", "precision", "transfer_tile", "use_kernel", "semiring",
+    ),
 )
 def transfer_prefix(
     blocks: jnp.ndarray,  # (T', F, B)
@@ -221,16 +230,18 @@ def transfer_prefix(
     precision: AcsPrecision = AcsPrecision(),
     transfer_tile: int = 32,
     use_kernel: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> jnp.ndarray:
     """Inclusive tile prefix products (N, F, S, S) — formation + scan,
     the lam0-INDEPENDENT half of ``timeparallel_forward``.  WAVA
     precomputes it once and reuses it across circulations (only the
     wrap-around entry metric changes between passes)."""
     m = transfer_matrices(
-        blocks, tables, precision, transfer_tile, use_kernel=use_kernel
+        blocks, tables, precision, transfer_tile, use_kernel=use_kernel,
+        semiring=semiring,
     )
     compose = functools.partial(
-        tropical_matmul, matmul_dtype=precision.matmul_dtype
+        semiring.matmul, matmul_dtype=precision.matmul_dtype
     )
     return jax.lax.associative_scan(compose, m, axis=0)
 

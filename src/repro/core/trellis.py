@@ -31,6 +31,8 @@ __all__ = [
     "dragonfly_theta",
     "dragonfly_groups",
     "build_acs_tables",
+    "ReverseTables",
+    "build_reverse_tables",
     "branch_output",
     "superbranch_output_bits",
 ]
@@ -333,4 +335,78 @@ def build_acs_tables(spec: CodeSpec, rho: int = 2) -> AcsTables:
         pred_onehot=pred_onehot,
         pred_state=pred_state,
         dec_bits=dec_bits,
+    )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static
+class ReverseTables:
+    """Tables for the time-REVERSED fused step (DESIGN.md §15).
+
+    The BCJR beta recursion runs the trellis backwards:
+
+        beta_t[i] = sum_v  branch(i, v) * beta_{t+1}[succ(i, v)]
+
+    which is the SAME matmul shape as the forward step with the roles of
+    predecessor/successor swapped: column (i*R + v) of theta_rev holds
+    the +-1 output pattern of the super-branch leaving state i on the
+    rho input bits of v (chronological, LSB-first — the forward
+    convention), and succ_onehot routes beta_{t+1} from the successor
+    state succ(i, v) = (v << (k-1-rho)) | (i >> rho).
+    """
+
+    spec: CodeSpec
+    rho: int
+    theta_rev: np.ndarray  # (rho*beta, S*R) float32, +-1
+    succ_onehot: np.ndarray  # (S, S*R) float32, one-hot
+    succ_state: np.ndarray  # (S, R) int32
+
+    @property
+    def n_states(self) -> int:
+        return self.spec.n_states
+
+    @property
+    def n_slots(self) -> int:
+        return 1 << self.rho
+
+    @property
+    def llr_block(self) -> int:
+        return self.rho * self.spec.beta
+
+    @property
+    def fused_w(self) -> np.ndarray:
+        """The stacked (B+S, S*R) operand of the reversed fused matmul."""
+        return np.concatenate([self.theta_rev, self.succ_onehot], axis=0)
+
+
+@functools.lru_cache(maxsize=64)
+def build_reverse_tables(spec: CodeSpec, rho: int = 2) -> ReverseTables:
+    k, S = spec.k, spec.n_states
+    if not 1 <= rho <= k - 1:
+        raise ValueError(f"rho must be in [1, k-1], got {rho}")
+    R = 1 << rho
+    B = rho * spec.beta
+
+    theta_rev = np.zeros((B, S * R), dtype=np.float32)
+    succ_onehot = np.zeros((S, S * R), dtype=np.float32)
+    succ_state = np.zeros((S, R), dtype=np.int32)
+
+    tr = build_transitions(spec)
+    for i in range(S):
+        for v in range(R):
+            in_bits = [(v >> b) & 1 for b in range(rho)]  # chronological
+            s = i
+            for u in in_bits:
+                s = int(tr.next_state[s, u])
+            col = i * R + v
+            succ_state[i, v] = s
+            bits = superbranch_output_bits(spec, i, in_bits)
+            theta_rev[:, col] = [(-1.0) ** b for b in bits]
+            succ_onehot[s, col] = 1.0
+
+    return ReverseTables(
+        spec=spec,
+        rho=rho,
+        theta_rev=theta_rev,
+        succ_onehot=succ_onehot,
+        succ_state=succ_state,
     )

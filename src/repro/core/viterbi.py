@@ -40,6 +40,7 @@ from .kernel_geometry import (  # noqa: F401 — pallas-free geometry + re-expor
     ring_words,
     time_parallel_plan,
 )
+from .semiring import NEG, TROPICAL, Semiring
 from .trellis import AcsTables, CodeSpec, build_acs_tables
 
 __all__ = [
@@ -53,9 +54,8 @@ __all__ = [
     "tiled_decode_stream",
     "blocks_from_llrs",
     "pick_time_tile",
+    "NEG",
 ]
-
-NEG = jnp.float32(-1.0e9)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,7 +160,9 @@ def init_metric(n_frames: int, n_states: int, initial_state: Optional[int]):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tables", "precision", "use_kernel", "pack_survivors"),
+    static_argnames=(
+        "tables", "precision", "use_kernel", "pack_survivors", "semiring",
+    ),
 )
 def forward_fused(
     blocks: jnp.ndarray,
@@ -169,6 +171,7 @@ def forward_fused(
     precision: AcsPrecision = AcsPrecision(),
     use_kernel: bool = False,
     pack_survivors: bool = False,
+    semiring: Semiring = TROPICAL,
 ):
     """Fused forward procedure.
 
@@ -176,12 +179,18 @@ def forward_fused(
     Returns (lam_final (F, S) f32, phis) with phis (T', F, S) int8 slots,
     or (T', F, S//16) int32 when ``pack_survivors`` (§Perf C2 — the
     paper's 32-bit output compaction applied to the survivor store).
+
+    ``semiring`` selects the slot reduction (DESIGN.md §15): TROPICAL
+    (max — the bit-exact Viterbi default) or LOGPROB (logsumexp — the
+    BCJR alpha recursion; ``phis`` then carry the per-slot argmax,
+    which soft decodes ignore).
     """
     if use_kernel:  # pragma: no cover - exercised via kernels tests
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.viterbi_forward(
-            blocks, lam0, tables, precision, pack_survivors=pack_survivors
+            blocks, lam0, tables, precision, pack_survivors=pack_survivors,
+            semiring=semiring.name,
         )
 
     W = jnp.asarray(tables.fused_w, precision.matmul_dtype)  # (B+S, S*R)
@@ -195,7 +204,7 @@ def forward_fused(
     def step(lam, l_t):
         pot = fused_potentials(l_t, lam, W, W_theta, W_pred, precision)
         pot = pot.reshape(lam.shape[0], S, R)
-        new_lam = jnp.max(pot, axis=-1)
+        new_lam = semiring.sum(pot, axis=-1)
         phi = jnp.argmax(pot, axis=-1)
         if pack_survivors:
             grp = phi.reshape(phi.shape[0], S // 16, 16).astype(jnp.int32)

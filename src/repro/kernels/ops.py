@@ -48,6 +48,7 @@ def viterbi_forward(
     *,
     block_frames: int = viterbi_acs.DEFAULT_BLOCK_FRAMES,
     pack_survivors: bool = False,
+    semiring: str = "tropical",
     interpret=None,
 ):
     """Pallas-backed fused forward (two-pass path).
@@ -74,6 +75,7 @@ def viterbi_forward(
         matmul_dtype=precision.matmul_dtype,
         renorm=precision.renorm,
         pack_survivors=pack_survivors,
+        semiring=semiring,
         interpret=interpret,
     )
 
@@ -127,10 +129,11 @@ def viterbi_transfer_matrices(
     *,
     transfer_tile: int,
     block_frames: int = 0,
+    semiring: str = "tropical",
     interpret=None,
 ):
     """Pallas-backed transfer-matrix formation (DESIGN.md §9): tile
-    tropical transfer matrices M (N, F, S, S) f32, built and composed in
+    semiring transfer matrices M (N, F, S, S) f32, built and composed in
     VMEM — plug-compatible with ``core.timeparallel.transfer_matrices``
     and selected there via ``use_kernel=True``."""
     from repro.core.viterbi import AcsPrecision
@@ -147,5 +150,6 @@ def viterbi_transfer_matrices(
         carry_dtype=precision.carry_dtype,
         matmul_dtype=precision.matmul_dtype,
         split_dot=precision.split_dot,
+        semiring=semiring,
         interpret=interpret,
     )

@@ -93,6 +93,17 @@ from repro.core.kernel_geometry import (  # noqa: E402,F401 — re-exports
 _SLOT_BITS = {2: 1, 4: 2, 8: 3, 16: 4}  # slot width in bits per radix
 
 
+def _semiring_reduce(pot: jnp.ndarray, semiring: str) -> jnp.ndarray:
+    """Slot reduction of the fused potentials (DESIGN.md §15): max for
+    "tropical" (bit-exact Viterbi), max-normalized logsumexp for
+    "logprob" (BCJR) — the normalization keeps the exp() argument <= 0
+    so the accumulator never overflows whatever the carry dtype."""
+    m = jnp.max(pot, axis=-1)
+    if semiring == "tropical":
+        return m
+    return m + jnp.log(jnp.sum(jnp.exp(pot - m[..., None]), axis=-1))
+
+
 def _pack_phi(phi: jnp.ndarray, n_states: int, bits: int) -> jnp.ndarray:
     """(..., S) slot indices -> (..., S//16) int32, 16 slots per word."""
     grp = phi.reshape(phi.shape[:-1] + (n_states // 16, 16)).astype(jnp.int32)
@@ -115,6 +126,7 @@ def _acs_kernel(
     matmul_dtype,
     renorm: bool,
     pack_survivors: bool,
+    semiring: str,
 ):
     T = blocks_ref.shape[0]
     S, R = n_states, n_slots
@@ -129,7 +141,7 @@ def _acs_kernel(
             x, w_ref[...], preferred_element_type=jnp.float32
         )  # (BF, S*R)
         pot = pot.reshape(pot.shape[0], S, R)
-        new_lam = jnp.max(pot, axis=-1)
+        new_lam = _semiring_reduce(pot, semiring)
         phi = jnp.argmax(pot, axis=-1)  # (BF, S) int32 in [0, R)
         if pack_survivors:
             phi_ref[t] = _pack_phi(phi, S, bits)
@@ -153,6 +165,7 @@ def _acs_kernel(
         "matmul_dtype",
         "renorm",
         "pack_survivors",
+        "semiring",
         "interpret",
     ),
 )
@@ -168,12 +181,17 @@ def acs_forward_pallas(
     matmul_dtype=jnp.float32,
     renorm: bool = True,
     pack_survivors: bool = False,
+    semiring: str = "tropical",
     interpret=None,
 ):
     """Run the fused forward pass.  Returns (lam_final (F,S) f32, phi).
 
     phi is (T, F, S) int8 slot indices, or (T, F, S//16) int32 when
     ``pack_survivors`` (16 slots x 2 bits per word for rho=2).
+    ``semiring`` selects the slot reduction (DESIGN.md §15): "tropical"
+    (max, bit-exact default) or "logprob" (max-normalized logsumexp,
+    the BCJR alpha recursion — phi then carries the per-slot argmax,
+    which soft decodes ignore).
     ``interpret=None`` auto-detects: Mosaic on TPU, emulation elsewhere.
     """
     interpret = _resolve_interpret(interpret)
@@ -201,6 +219,7 @@ def acs_forward_pallas(
         matmul_dtype=matmul_dtype,
         renorm=renorm,
         pack_survivors=pack_survivors,
+        semiring=semiring,
     )
     lam_out, phi = pl.pallas_call(
         kernel,
@@ -536,8 +555,9 @@ def _transfer_kernel(
     carry_dtype,
     matmul_dtype,
     split_dot: bool,
+    semiring: str,
 ):
-    """Build one tile's tropical transfer matrices in VMEM.
+    """Build one tile's semiring transfer matrices in VMEM.
 
     The entry-state axis is folded into the matmul batch: row (f, i)
     carries the metric-from-entry-i vector of frame f, so every
@@ -576,7 +596,7 @@ def _transfer_kernel(
         pot = fused_potentials(
             l2, m, w_mm, w_mm[:llr_block], w_f32[llr_block:], precision
         )
-        new = jnp.max(pot.reshape(rows, S, R), axis=-1)
+        new = _semiring_reduce(pot.reshape(rows, S, R), semiring)
         # no per-row renorm (a per-entry offset would skew the tropical
         # product); the per-frame normalization below bounds the scan
         return new.astype(carry_dtype).astype(jnp.float32)
@@ -597,6 +617,7 @@ def _transfer_kernel(
         "carry_dtype",
         "matmul_dtype",
         "split_dot",
+        "semiring",
         "interpret",
     ),
 )
@@ -611,9 +632,10 @@ def transfer_matrix_pallas(
     carry_dtype=jnp.float32,
     matmul_dtype=jnp.float32,
     split_dot: bool = False,
+    semiring: str = "tropical",
     interpret=None,
 ):
-    """Per-tile tropical transfer matrices M (N, F, S, S) f32, normalized
+    """Per-tile semiring transfer matrices M (N, F, S, S) f32, normalized
     per (tile, frame) by their max entry (DESIGN.md §9).  Grid
     (n_tiles, frame_blocks) — tiles are independent, so the whole
     formation is one embarrassingly-parallel launch; the associative
@@ -667,6 +689,7 @@ def transfer_matrix_pallas(
         carry_dtype=carry_dtype,
         matmul_dtype=matmul_dtype,
         split_dot=split_dot,
+        semiring=semiring,
     )
     m = pl.pallas_call(
         kernel,

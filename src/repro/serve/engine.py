@@ -108,12 +108,13 @@ __all__ = [
     "DecodeEngine",
 ]
 
-SLO_CLASSES = ("latency", "throughput")
+SLO_CLASSES = ("latency", "throughput", "soft")
 
 # max batch-assembly wait per SLO class, seconds (DESIGN.md §10):
 # latency-class cells flush an order of magnitude sooner than
-# throughput-class cells trade wait for fill
-DEFAULT_MAX_WAIT = {"latency": 0.001, "throughput": 0.010}
+# throughput-class cells trade wait for fill.  "soft" cells (§15
+# BCJR soft output) batch like throughput traffic.
+DEFAULT_MAX_WAIT = {"latency": 0.001, "throughput": 0.010, "soft": 0.010}
 
 # throughput-class cells at or above this many radix steps route to the
 # §8 one-pass streaming path when the engine's decoder is
@@ -135,6 +136,10 @@ DEGRADATION_LADDER = {
     "time_parallel": ("time_parallel", "batch"),
     "wava": ("wava",),
     "batch": ("batch",),
+    # §15 soft output has no bit-identical alternative implementation
+    # (real-valued LLRs, no routing-equivalence contract with the hard
+    # paths) — like WAVA it retries in place
+    "soft": ("soft",),
 }
 
 
@@ -187,6 +192,10 @@ class Ticket:
     done: bool = False
     dropped: bool = False
     bits: Optional[np.ndarray] = None
+    # §15 soft ("soft" SLO class) dispatches also fill ``llrs`` with
+    # the per-bit BCJR posteriors (np.float32); ``bits`` then carries
+    # their hard signs so downstream consumers need not branch
+    llrs: Optional[np.ndarray] = None
     completed: Optional[float] = None
     cell: Optional[Tuple] = None
     path: Optional[str] = None
@@ -504,6 +513,10 @@ class DecodeEngine:
         """The §10 SLO -> decode-path routing table, in code order."""
         dec = self._decoder(code)
         steps = -(-n_stages // dec.rho)
+        if slo == "soft":
+            # §15 soft output routes unconditionally — decode_soft picks
+            # the circular (tail-biting) vs open BCJR formulation itself
+            return "soft"
         if dec.termination == "tailbiting":
             return "wava"
         if slo == "latency":
@@ -546,6 +559,10 @@ class DecodeEngine:
         fin = 0 if flushed else None
         if path == "wava":
             fn = lambda llrs: dec.decode_tailbiting(llrs)[0]  # noqa: E731
+        elif path == "soft":
+            fn = lambda llrs: dec.decode_soft(  # noqa: E731
+                llrs, output="llr", initial_state=0, final_state=fin,
+            )
         elif path == "time_parallel":
             fn = lambda llrs: dec.decode_batch(  # noqa: E731
                 llrs, initial_state=0, final_state=fin,
@@ -813,7 +830,7 @@ class DecodeEngine:
                     )
                 with rec.span("engine.device_wait"):
                     bits = np.asarray(out)
-                if self.chaos is not None:
+                if self.chaos is not None and path != "soft":
                     # armed bit_flip events corrupt the decoded bits
                     # AFTER the dispatch — silent by definition; only
                     # the §14 scrubber below can catch it
@@ -827,7 +844,10 @@ class DecodeEngine:
                         wall, code=code_name, path=path, f=f_cell, t=l_cell
                     )
             corrupt_ids: set = set()
-            if self.scrub.enabled and self.scrub.sample():
+            # §15 soft output is real-valued — no bit-identical shadow
+            # rung exists, so the §14 scrubber has nothing to vote
+            # against and soft dispatches are never sampled
+            if path != "soft" and self.scrub.enabled and self.scrub.sample():
                 with rec.span("engine.scrub", n=k, path=path):
                     corrupt_ids = self._scrub_dispatch(
                         code_name, path, f_cell, l_cell,
@@ -838,6 +858,11 @@ class DecodeEngine:
                 for i, (ticket, _) in enumerate(entries):
                     if i in corrupt_ids:
                         ticket.error = "sdc_detected"
+                    elif path == "soft":
+                        ticket.llrs = (
+                            bits[i, : ticket.n_out].astype(np.float32)
+                        )
+                        ticket.bits = (ticket.llrs < 0).astype(np.int32)
                     else:
                         ticket.bits = (
                             bits[i, : ticket.n_out].astype(np.int32)

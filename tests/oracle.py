@@ -1,0 +1,174 @@
+"""Exhaustive trellis oracle (DESIGN.md §15 test harness).
+
+Brute-force ground truth for short frames (n <= ~24): enumerate ALL 2^n
+message sequences, encode each through the numpy FSM tables, and score
+them against the received LLRs.  From the full codeword table it derives
+
+  * ``ml_path``       — the exact maximum-likelihood sequence + metric
+                        (what Viterbi / WAVA must find),
+  * ``top_l_paths``   — the exact L best sequences, metric-sorted
+                        (what the §15 list-Viterbi must find),
+  * ``exact_bit_llrs``— exact per-bit posterior LLRs by summing the
+                        likelihoods of ALL codewords (what the §15 BCJR
+                        must reproduce), in float64.
+
+All three share one chunked enumeration (chunks of 2^16 sequences) so
+n=24 stays tractable: nothing larger than (65536, n) is ever
+materialized.  Conventions match the library exactly: path metric is
+sum_t (1-2*coded[t]) . llr[t]; sequence log-likelihood is metric/2 (the
+lambda/2 scaling of core/soft.py); tail-biting initializes the encoder
+register from the last k-1 bits (``encoder.tail_bite_state``) so every
+sequence is a valid circular codeword; an open trellis optionally pins
+``initial_state``/``final_state`` by filtering incompatible sequences.
+Zero LLRs (punctured-stage erasures) contribute nothing to any metric,
+so depunctured stage LLRs can be passed straight in.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core.trellis import CodeSpec, build_transitions
+
+__all__ = ["ml_path", "top_l_paths", "exact_bit_llrs"]
+
+_CHUNK = 1 << 16
+
+
+def _enumerate(
+    llrs: np.ndarray,
+    spec: CodeSpec,
+    initial_state: Optional[int],
+    final_state: Optional[int],
+    tail_bite: bool,
+) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Yield (bits (M, n) int8, metric (M,) float64) over all valid
+    message sequences, in chunks.  Bit t of sequence index ``i`` is
+    ``(i >> t) & 1`` (chronological from the LSB)."""
+    llrs = np.asarray(llrs, np.float64)
+    n = llrs.shape[0]
+    if n > 26:
+        raise ValueError(f"exhaustive oracle is 2^n: n={n} is too large")
+    tr = build_transitions(spec)
+    next_state = tr.next_state  # (S, 2)
+    theta = 1.0 - 2.0 * np.asarray(tr.out_bits, np.float64)  # (S, 2, beta)
+    # per-(state, input) branch metric of stage t: (S, 2)
+    branch = np.einsum("sub,tb->tsu", theta, llrs)
+    k = spec.k
+    for start in range(0, 1 << n, _CHUNK):
+        idx = np.arange(start, min(start + _CHUNK, 1 << n), dtype=np.int64)
+        bits = ((idx[:, None] >> np.arange(n)) & 1).astype(np.int8)
+        if tail_bite:
+            # encoder register preloaded with the LAST k-1 bits, most
+            # recent at the MSB (encoder.tail_bite_state) — every
+            # sequence is then a valid circular codeword
+            s = np.zeros(idx.shape[0], dtype=np.int64)
+            for i in range(k - 1):
+                s |= bits[:, n - 1 - i].astype(np.int64) << (k - 2 - i)
+        else:
+            s = np.full(idx.shape[0], 0 if initial_state is None else
+                        initial_state, dtype=np.int64)
+        metric = np.zeros(idx.shape[0], np.float64)
+        for t in range(n):
+            u = bits[:, t].astype(np.int64)
+            metric += branch[t, s, u]
+            s = next_state[s, u]
+        if not tail_bite and initial_state is None:
+            # truncated mode: all start states at metric 0 — enumerate
+            # each start separately
+            raise NotImplementedError(
+                "oracle requires a pinned or tail-biting start"
+            )
+        if not tail_bite and final_state is not None:
+            keep = s == final_state
+            bits, metric = bits[keep], metric[keep]
+        yield bits, metric
+
+
+def ml_path(
+    llrs: np.ndarray,
+    spec: CodeSpec,
+    initial_state: Optional[int] = 0,
+    final_state: Optional[int] = None,
+    tail_bite: bool = False,
+) -> Tuple[np.ndarray, float]:
+    """Exact ML sequence: (bits (n,) int64, metric float).  The metric is
+    in decoder units (sum (1-2c).llr, no /2)."""
+    best_bits, best = None, -np.inf
+    for bits, metric in _enumerate(
+        llrs, spec, initial_state, final_state, tail_bite
+    ):
+        if metric.shape[0] == 0:
+            continue
+        a = int(np.argmax(metric))
+        if metric[a] > best:
+            best, best_bits = float(metric[a]), bits[a].astype(np.int64)
+    if best_bits is None:
+        raise ValueError("no sequence satisfies the state pins")
+    return best_bits, best
+
+
+def top_l_paths(
+    llrs: np.ndarray,
+    spec: CodeSpec,
+    n_list: int,
+    initial_state: Optional[int] = 0,
+    final_state: Optional[int] = None,
+    tail_bite: bool = False,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact L best sequences: (bits (L, n) int64, metrics (L,) f64),
+    metric-sorted descending.  Raises if fewer than L sequences satisfy
+    the pins."""
+    cand_bits: list = []
+    cand_met: list = []
+    for bits, metric in _enumerate(
+        llrs, spec, initial_state, final_state, tail_bite
+    ):
+        if metric.shape[0] == 0:
+            continue
+        keep = min(n_list, metric.shape[0])
+        part = np.argpartition(-metric, keep - 1)[:keep]
+        cand_bits.append(bits[part])
+        cand_met.append(metric[part])
+        if len(cand_bits) > 1:  # re-prune the running pool
+            b = np.concatenate(cand_bits)
+            m = np.concatenate(cand_met)
+            keep = min(n_list, m.shape[0])
+            part = np.argpartition(-m, keep - 1)[:keep]
+            cand_bits, cand_met = [b[part]], [m[part]]
+    if not cand_met or cand_met[0].shape[0] < n_list:
+        raise ValueError(f"fewer than {n_list} sequences satisfy the pins")
+    b, m = cand_bits[0], cand_met[0]
+    order = np.argsort(-m, kind="stable")
+    return b[order].astype(np.int64), m[order]
+
+
+def exact_bit_llrs(
+    llrs: np.ndarray,
+    spec: CodeSpec,
+    initial_state: Optional[int] = 0,
+    final_state: Optional[int] = None,
+    tail_bite: bool = False,
+) -> np.ndarray:
+    """Exact per-bit posterior LLRs (n,) float64:
+    LLR[t] = log sum_{seq: bit_t=0} P(y|seq) - log sum_{seq: bit_t=1},
+    with log P(y|seq) = metric/2 + const (the constant cancels)."""
+    n = np.asarray(llrs).shape[0]
+    # running logsumexp accumulators per (bit position, bit value)
+    acc = np.full((n, 2), -np.inf)
+    for bits, metric in _enumerate(
+        llrs, spec, initial_state, final_state, tail_bite
+    ):
+        if metric.shape[0] == 0:
+            continue
+        logp = 0.5 * metric
+        m = np.max(logp)
+        w = np.exp(logp - m)  # (M,)
+        for v in (0, 1):
+            s = w @ (bits == v)  # (n,)
+            nz = s > 0
+            lse = np.full(n, -np.inf)
+            lse[nz] = m + np.log(s[nz])
+            acc[:, v] = np.logaddexp(acc[:, v], lse)
+    return acc[:, 0] - acc[:, 1]

@@ -158,32 +158,23 @@ def test_tailbite_encoder_closes_circle():
         np.testing.assert_array_equal(a, b)
 
 
-def _brute_force_circular(llr, spec):
-    """ML tail-biting decode: best zero-loss path over ALL boundary
-    states (exponential in k — fine for K=3)."""
-    best_metric, best_bits = -np.inf, None
-    for s in range(spec.n_states):
-        dec = viterbi_decode_ref(llr, spec, initial_state=s, final_state=s)
-        coded = conv_encode(dec, spec, initial_state=s)
-        metric = float(((1.0 - 2.0 * coded) * llr).sum())
-        if metric > best_metric:
-            best_metric, best_bits = metric, dec
-    return best_bits, best_metric
-
-
 @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
 def test_wava_equals_brute_force_circular_k3(seed):
     """ISSUE satellite: WAVA == exhaustive circular decode on a small
-    K=3 code (metric equality; at these SNRs the ML path is unique)."""
+    K=3 code (metric equality; at these SNRs the ML path is unique).
+    The ground truth is tests/oracle.py's full 2^n codeword enumeration
+    (every tail-biting sequence, not just every boundary state)."""
+    from oracle import ml_path
+
     rng = np.random.default_rng(seed)
     spec = SPEC_K3
-    n = 24
+    n = 16
     bits = rng.integers(0, 2, n)
     coded = conv_encode(bits, spec, tail_bite=True)
     llr = 1.0 - 2.0 * coded.astype(np.float64)
     llr = llr + rng.normal(0.0, 0.45, llr.shape)
 
-    want_bits, want_metric = _brute_force_circular(llr, spec)
+    want_bits, want_metric = ml_path(llr, spec, tail_bite=True)
     tables = build_acs_tables(spec, 2)
     got, conv = wava_decode(
         jnp.asarray(llr, jnp.float32)[None], tables, max_iters=8

@@ -1,0 +1,151 @@
+"""Semiring abstraction (DESIGN.md §15): algebraic axioms of the
+tropical (max-plus) and log-probability (logsumexp-plus) semirings,
+scan/fold equivalence, and the zero-temperature limit connecting them.
+
+Property tests run under hypothesis when installed and degrade to a
+skip otherwise (tests/_hypothesis_compat.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.semiring import LOGPROB, NEG, TROPICAL, get_semiring
+
+SEMIRINGS = [TROPICAL, LOGPROB]
+
+
+def _rand_mats(rng, n, count, integers=False):
+    """Small square matrices with finite entries.  Integer-valued floats
+    make tropical matmul EXACT (max and + are both exact on ints), so
+    associativity asserts bitwise there; log-semiring gets an atol."""
+    if integers:
+        return [
+            jnp.asarray(rng.integers(-8, 9, (n, n)), jnp.float32)
+            for _ in range(count)
+        ]
+    return [
+        jnp.asarray(rng.normal(0.0, 2.0, (n, n)), jnp.float32)
+        for _ in range(count)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# registry / identities
+# ---------------------------------------------------------------------------
+
+def test_get_semiring_roundtrip_and_unknown():
+    assert get_semiring("tropical") is TROPICAL
+    assert get_semiring("logprob") is LOGPROB
+    with pytest.raises(ValueError, match="unknown semiring"):
+        get_semiring("boolean")
+
+
+@pytest.mark.parametrize("sr", SEMIRINGS, ids=lambda s: s.name)
+def test_identity_matrix_is_neutral(sr):
+    rng = np.random.default_rng(0)
+    (a,) = _rand_mats(rng, 8, 1)
+    eye = sr.identity(8)
+    np.testing.assert_allclose(
+        np.asarray(sr.matmul(eye, a)), np.asarray(a), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(sr.matmul(a, eye)), np.asarray(a), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("sr", SEMIRINGS, ids=lambda s: s.name)
+def test_zero_one_elements(sr):
+    # additive identity annihilates under sum, multiplicative under prod
+    x = jnp.asarray([1.5, -2.0], jnp.float32)
+    assert float(sr.sum(jnp.asarray([sr.zero, 3.0]))) == pytest.approx(
+        3.0, abs=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(sr.prod(x, sr.one)), np.asarray(x)
+    )
+
+
+# ---------------------------------------------------------------------------
+# associativity (the property the §9 blocked formulation relies on)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None, derandomize=True)
+def test_property_tropical_matmul_associative_exact(seed):
+    rng = np.random.default_rng(seed)
+    a, b, c = _rand_mats(rng, 8, 3, integers=True)
+    left = TROPICAL.matmul(TROPICAL.matmul(a, b), c)
+    right = TROPICAL.matmul(a, TROPICAL.matmul(b, c))
+    np.testing.assert_array_equal(np.asarray(left), np.asarray(right))
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None, derandomize=True)
+def test_property_logprob_matmul_associative(seed):
+    rng = np.random.default_rng(seed)
+    a, b, c = _rand_mats(rng, 8, 3)
+    left = LOGPROB.matmul(LOGPROB.matmul(a, b), c)
+    right = LOGPROB.matmul(a, LOGPROB.matmul(b, c))
+    np.testing.assert_allclose(
+        np.asarray(left), np.asarray(right), atol=1e-4
+    )
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None, derandomize=True)
+def test_property_associative_scan_equals_sequential_fold(seed):
+    """jax.lax.associative_scan over semiring matmul == a left fold —
+    the §9/§15 prefix-composition correctness in one property."""
+    rng = np.random.default_rng(seed)
+    n, count = 4, 6
+    for sr in SEMIRINGS:
+        mats = jnp.stack(_rand_mats(rng, n, count, integers=(sr is TROPICAL)))
+        # transfer-matrix convention: compose(a, b) = b . a (later stage
+        # on the left), exactly as core.timeparallel.prefix_entry_metrics
+        compose = lambda a, b: sr.matmul(b, a)  # noqa: E731
+        scanned = jax.lax.associative_scan(
+            lambda a, b: jax.vmap(compose)(a, b), mats
+        )
+        acc = mats[0]
+        for i in range(1, count):
+            acc = compose(acc, mats[i])
+            np.testing.assert_allclose(
+                np.asarray(scanned[i]), np.asarray(acc), atol=1e-4,
+                err_msg=f"{sr.name} scan diverges from fold at step {i}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# the zero-temperature limit: logprob -> tropical
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None, derandomize=True)
+def test_property_zero_temperature_limit(seed):
+    """(1/tau) applied inside LOGPROB.sum(tau * x) -> max(x) as tau -> 0:
+    the log semiring anneals to the tropical one, which is why the two
+    share one fused-ACS code path (DESIGN.md §15)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0.0, 3.0, (16,)), jnp.float32)
+    want = float(TROPICAL.sum(x))
+    prev_gap = np.inf
+    for tau in (1.0, 0.25, 0.05):
+        got = float(LOGPROB.sum(x / tau)) * tau
+        gap = abs(got - want)
+        assert gap <= prev_gap + 1e-6  # monotone approach
+        prev_gap = gap
+    assert prev_gap < 0.05 * 3  # tau=0.05: gap <= tau * log(16) < 0.14
+
+
+def test_matmul_matches_tropical_matmul_alias():
+    """timeparallel.tropical_matmul is the TROPICAL semiring matmul —
+    the refactor's bit-compatibility contract."""
+    from repro.core.timeparallel import tropical_matmul
+
+    rng = np.random.default_rng(1)
+    a, b = _rand_mats(rng, 8, 2)
+    np.testing.assert_array_equal(
+        np.asarray(tropical_matmul(a, b)),
+        np.asarray(TROPICAL.matmul(a, b)),
+    )

@@ -1,0 +1,267 @@
+"""Soft-output BCJR + list-Viterbi (DESIGN.md §15), pinned by the
+exhaustive trellis oracle (tests/oracle.py) and by bit-exactness
+contracts against the hard decoders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from oracle import exact_bit_llrs, ml_path, top_l_paths
+
+from repro.codes import (
+    encode_standard,
+    get_code,
+    list_codes,
+    puncture,
+    standard_llrs,
+    tx_frames,
+)
+from repro.core import CodeSpec, ViterbiDecoder
+from repro.core.encoder import conv_encode
+from repro.core.soft import (
+    bcjr_circular_llrs,
+    bcjr_llrs,
+    list_decode,
+    wava_list_decode,
+)
+from repro.core.trellis import build_acs_tables
+
+SPEC_K3 = CodeSpec(k=3, polys=(0o7, 0o5))
+SPEC_K5 = CodeSpec(k=5, polys=(0o23, 0o35))
+
+
+def _noisy_llrs(rng, spec, n, sigma, tail_bite=False):
+    bits = rng.integers(0, 2, n)
+    coded = conv_encode(bits, spec, tail_bite=tail_bite)
+    llr = 1.0 - 2.0 * coded.astype(np.float64)
+    return bits, llr + rng.normal(0.0, sigma, llr.shape)
+
+
+# ---------------------------------------------------------------------------
+# BCJR LLRs vs the exhaustive oracle (ISSUE acceptance: atol 1e-4, f32)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [SPEC_K3, SPEC_K5], ids=["k3", "k5"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bcjr_matches_oracle_open(spec, seed):
+    rng = np.random.default_rng(seed)
+    _, llr = _noisy_llrs(rng, spec, 14, 0.8)
+    got = np.asarray(bcjr_llrs(jnp.asarray(llr, jnp.float32)[None], spec))[0]
+    want = exact_bit_llrs(llr, spec, initial_state=0)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bcjr_matches_oracle_final_pinned(seed):
+    """Pinned-end trellis: positions the pin forces are +/-inf in the
+    oracle; the BCJR saturates there (|llr| ~ NEG) with matching sign."""
+    rng = np.random.default_rng(seed)
+    spec = SPEC_K3
+    _, llr = _noisy_llrs(rng, spec, 14, 0.8)
+    got = np.asarray(
+        bcjr_llrs(jnp.asarray(llr, jnp.float32)[None], spec, final_state=0)
+    )[0]
+    want = exact_bit_llrs(llr, spec, initial_state=0, final_state=0)
+    fin = np.isfinite(want)
+    assert (~fin).sum() == spec.k - 1  # the k-1 forced flush bits
+    np.testing.assert_allclose(got[fin], want[fin], atol=1e-4)
+    assert (got[~fin] > 1e8).all()  # forced-to-0 bits saturate positive
+
+
+@pytest.mark.parametrize(
+    "spec", [SPEC_K3, get_code("lte-tbcc").spec], ids=["k3", "k7-beta3"]
+)
+def test_bcjr_circular_matches_oracle_tailbiting(spec):
+    rng = np.random.default_rng(11)
+    n = 12
+    _, llr = _noisy_llrs(rng, spec, n, 0.8, tail_bite=True)
+    tables = build_acs_tables(spec, 2)
+    got = np.asarray(
+        bcjr_circular_llrs(jnp.asarray(llr, jnp.float32)[None], tables)
+    )[0]
+    want = exact_bit_llrs(llr, spec, tail_bite=True)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_bcjr_matches_oracle_punctured_erasures(seed=5):
+    """Zero-LLR erasures (the §7 depuncture convention) are
+    information-free in the log semiring: BCJR on the depunctured
+    stages == oracle on the same zero-filled stages."""
+    rng = np.random.default_rng(seed)
+    pat = get_code("wifi-11a-r34").puncture
+    spec = SPEC_K3
+    n = 12
+    _, llr = _noisy_llrs(rng, spec, n, 0.6)
+    mask = pat._tiled_mask(n)
+    llr = np.where(mask, llr, 0.0)  # erase the punctured positions
+    got = np.asarray(bcjr_llrs(jnp.asarray(llr, jnp.float32)[None], spec))[0]
+    want = exact_bit_llrs(llr, spec, initial_state=0)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_bcjr_kernel_path_matches_xla():
+    rng = np.random.default_rng(2)
+    _, llr = _noisy_llrs(rng, SPEC_K5, 16, 0.8)
+    x = jnp.asarray(llr, jnp.float32)[None]
+    a = np.asarray(bcjr_llrs(x, SPEC_K5, use_kernel=False))
+    b = np.asarray(bcjr_llrs(x, SPEC_K5, use_kernel=True))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sign(LLR) == Viterbi at 6 dB on every registry code
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(list_codes()))
+def test_soft_signs_match_hard_decode_all_standards(name):
+    """ISSUE acceptance: at 6 dB the MAP-per-bit signs agree with the
+    ML-sequence decode on every registry entry (incl. the punctured and
+    WAVA tail-biting codes), through the decode_soft front door."""
+    code = get_code(name)
+    dec = ViterbiDecoder.from_standard(name)
+    kb, kn = jax.random.split(jax.random.PRNGKey(len(name)))
+    bits = jax.random.bernoulli(kb, 0.5, (2, 128)).astype(jnp.int32)
+    llrs = standard_llrs(
+        kn, encode_standard(tx_frames(bits, code), code), 6.0, code
+    )
+    hard = np.asarray(dec.decode_batch(llrs))
+    soft = np.asarray(dec.decode_soft(llrs, output="llr"))
+    assert soft.dtype == np.float32 and soft.shape == hard.shape
+    np.testing.assert_array_equal((soft < 0).astype(np.int32), hard)
+    # output="bits" is exactly the hardened llr output
+    np.testing.assert_array_equal(
+        np.asarray(dec.decode_soft(llrs, output="bits")), hard
+    )
+
+
+def test_decode_soft_rejects_unknown_output():
+    dec = ViterbiDecoder.from_standard("ccsds-k7")
+    with pytest.raises(ValueError, match="output"):
+        dec.decode_soft(jnp.zeros((1, 4, 2)), output="posterior")
+
+
+# ---------------------------------------------------------------------------
+# list-Viterbi
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(list_codes()))
+def test_list_l1_bit_exact_with_decode_batch(name):
+    """ISSUE acceptance: L=1 list decode is bit-exact with the hard
+    decoder on every registry code — same trellis, same tie-breaks
+    (WAVA loop for tail-biting entries)."""
+    code = get_code(name)
+    dec = ViterbiDecoder.from_standard(name)
+    kb, kn = jax.random.split(jax.random.PRNGKey(3 * len(name)))
+    bits = jax.random.bernoulli(kb, 0.5, (3, 96)).astype(jnp.int32)
+    llrs = standard_llrs(
+        kn, encode_standard(tx_frames(bits, code), code), 4.0, code
+    )
+    hard = np.asarray(dec.decode_batch(llrs))
+    lbits, lmet = dec.decode_soft(llrs, output="list", n_list=1)
+    np.testing.assert_array_equal(np.asarray(lbits)[:, 0], hard)
+    assert np.asarray(lmet).shape == (3, 1)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_list_topl_matches_oracle_k3(seed):
+    """ISSUE acceptance: the top-L list equals the oracle's exhaustive
+    top-L on K=3 — bits exactly; metrics after removing the per-frame
+    renorm shift (re-encode the returned paths for true metrics)."""
+    rng = np.random.default_rng(seed)
+    spec = SPEC_K3
+    n, L = 12, 4
+    _, llr = _noisy_llrs(rng, spec, n, 1.0)
+    want_bits, want_met = top_l_paths(llr, spec, L, initial_state=0)
+    got_bits, got_met = list_decode(
+        jnp.asarray(llr, jnp.float32)[None], spec, n_list=L
+    )
+    got_bits = np.asarray(got_bits)[0]
+    np.testing.assert_array_equal(got_bits, want_bits)
+    true_met = np.array([
+        ((1.0 - 2.0 * conv_encode(b, spec)) * llr).sum() for b in got_bits
+    ])
+    np.testing.assert_allclose(true_met, want_met, atol=1e-4)
+    # returned metrics are the true ones up to ONE per-frame renorm
+    # constant: rank differences must match exactly
+    shift = np.asarray(got_met)[0] - true_met
+    np.testing.assert_allclose(shift, shift[0], atol=1e-3)
+
+
+def test_list_paths_distinct_and_sorted():
+    rng = np.random.default_rng(9)
+    _, llr = _noisy_llrs(rng, SPEC_K5, 16, 1.2)
+    bits, met = list_decode(
+        jnp.asarray(llr, jnp.float32)[None], SPEC_K5, n_list=6
+    )
+    bits, met = np.asarray(bits)[0], np.asarray(met)[0]
+    assert len({tuple(b) for b in bits}) == 6  # all distinct
+    assert (np.diff(met) <= 1e-5).all()  # metric-sorted descending
+
+
+def test_wava_list_l1_matches_wava_decode():
+    code = get_code("lte-tbcc")
+    dec = ViterbiDecoder.from_standard("lte-tbcc")
+    kb, kn = jax.random.split(jax.random.PRNGKey(5))
+    bits = jax.random.bernoulli(kb, 0.5, (3, 64)).astype(jnp.int32)
+    llrs = standard_llrs(kn, encode_standard(bits, code), 4.0, code)
+    tables = build_acs_tables(code.spec, 2)
+    want, conv = dec.decode_tailbiting(llrs)
+    got, met, conv2 = wava_list_decode(llrs, tables, n_list=1)
+    np.testing.assert_array_equal(np.asarray(got)[:, 0], np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(conv2), np.asarray(conv))
+
+
+def test_wava_list_topl_matches_oracle_k3():
+    """Exhaustive check of the circular list: every returned path is a
+    valid tail-biting codeword and the list head is the circular ML
+    sequence from the oracle."""
+    rng = np.random.default_rng(21)
+    spec = SPEC_K3
+    n = 14
+    _, llr = _noisy_llrs(rng, spec, n, 0.5, tail_bite=True)
+    tables = build_acs_tables(spec, 2)
+    want_bits, want_met = ml_path(llr, spec, tail_bite=True)
+    got, met, conv = wava_list_decode(
+        jnp.asarray(llr, jnp.float32)[None], tables, n_list=4
+    )
+    assert bool(np.asarray(conv)[0])
+    got = np.asarray(got)[0]
+    np.testing.assert_array_equal(got[0], want_bits)
+    head_met = ((1.0 - 2.0 * conv_encode(got[0], spec, tail_bite=True))
+                * llr).sum()
+    np.testing.assert_allclose(head_met, want_met, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# front-door plumbing
+# ---------------------------------------------------------------------------
+
+def test_decode_soft_punctured_serial_front_door():
+    """Punctured codes submit the serial kept-LLR stream; decode_soft
+    depunctures exactly like decode_batch (zero-LLR erasures)."""
+    name = "wifi-11a-r34"
+    code = get_code(name)
+    dec = ViterbiDecoder.from_standard(name)
+    kb, kn = jax.random.split(jax.random.PRNGKey(17))
+    bits = jax.random.bernoulli(kb, 0.5, (2, 96)).astype(jnp.int32)
+    serial = standard_llrs(
+        kn, encode_standard(tx_frames(bits, code), code), 6.0, code
+    )
+    assert serial.ndim == 2  # (F, Lp) serial streams
+    soft = np.asarray(dec.decode_soft(serial, output="llr"))
+    dense = dec.depunctured(serial)
+    want = np.asarray(
+        bcjr_llrs(dense, code.spec, transfer_tile=dec.transfer_tile)
+    )
+    np.testing.assert_allclose(soft, want, atol=1e-5)
+
+
+def test_decode_soft_pads_odd_lengths():
+    """n % rho != 0 pads internally (the §10 padding lemma holds for
+    erasure stages in the log semiring) and slices back."""
+    dec = ViterbiDecoder.from_standard("ccsds-k7")
+    rng = np.random.default_rng(8)
+    _, llr = _noisy_llrs(rng, dec.spec, 15, 0.5)
+    out = np.asarray(dec.decode_soft(jnp.asarray(llr, jnp.float32)[None]))
+    assert out.shape == (1, 15)
+    want = exact_bit_llrs(llr, dec.spec, initial_state=0)
+    np.testing.assert_allclose(out[0], want, atol=1e-4)
